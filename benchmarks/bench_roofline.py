@@ -1,0 +1,46 @@
+"""§Roofline report generator: three-term roofline per (arch x shape x
+mesh) cell from the dry-run records (results/*.jsonl)."""
+from __future__ import annotations
+
+import os
+from typing import List
+
+from repro.analysis.roofline import fmt_markdown, load_records, table
+
+RESULTS = [os.path.join(os.path.dirname(__file__), "..", "results", p)
+           for p in ("dryrun.jsonl", "dryrun_icicle2.jsonl")]
+
+
+def main() -> List[str]:
+    recs = load_records(*RESULTS)
+    # hillclimb iterations live in dryrun_hillclimb.jsonl (EXPERIMENTS §Perf)
+    recs = [r for r in recs if r.get("tag", "") in ("", "icicle")]
+    if not recs:
+        print("VALIDATION-FAIL: no dry-run records; run "
+              "python -m repro.launch.dryrun --sweep first")
+        return ["no records"]
+    for mesh in ("16x16", "2x16x16"):
+        rows = table(recs, mesh)
+        if not rows:
+            continue
+        print(f"== mesh {mesh} ==")
+        print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+              "roofline_frac,hbm_gib,hbm_lo_gib,fits")
+        for r in rows:
+            if r["dominant"] == "SKIP":
+                print(f"{r['arch']},{r['shape']},,,,SKIP,,,,")
+                continue
+            print(f"{r['arch']},{r['shape']},{r['compute_s']:.5g},"
+                  f"{r['memory_s']:.5g},{r['collective_s']:.5g},"
+                  f"{r['dominant']},{r['roofline_fraction']:.3f},"
+                  f"{r['hbm_used_gib']:.1f},{r['hbm_lo_gib']:.1f},"
+                  f"{'Y' if r['fits_hbm'] else 'N'}")
+    ok = [r for r in recs if r.get("status") == "ok"]
+    sk = [r for r in recs if r.get("status") == "skipped"]
+    err = [r for r in recs if r.get("status") == "error"]
+    print(f"cells: ok={len(ok)} skipped={len(sk)} error={len(err)}")
+    return [f"{len(err)} dry-run errors"] if err else []
+
+
+if __name__ == "__main__":
+    main()

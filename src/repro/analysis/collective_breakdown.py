@@ -1,0 +1,49 @@
+"""Per-shape collective attribution: which tensors' collectives dominate a
+compiled module. The hillclimb's profiler (DESIGN.md: 'your profile is
+lowered.as_text() + cost_analysis')."""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+from repro.analysis.hlocost import (_COMP_START_RE, _TRIP_RE, _CALLEE_RE,
+                                    _collective_cost, parse_computations)
+
+
+def collective_breakdown(hlo: str, top: int = 15) -> List[Dict]:
+    comps = parse_computations(hlo)
+    types_per_comp = {c: {i.name: i.type_str for i in instrs}
+                      for c, instrs in comps.items()}
+    producers_per_comp = {c: {i.name: i for i in instrs}
+                          for c, instrs in comps.items()}
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+    entry = m.group(1) if m else next(iter(comps))
+
+    agg = defaultdict(lambda: {"count": 0.0, "wire": 0.0, "operand": 0.0})
+
+    def walk(cname, mult, seen):
+        if cname not in comps or cname in seen:
+            return
+        types = types_per_comp[cname]
+        producers = producers_per_comp[cname]
+        for ins in comps[cname]:
+            c = _collective_cost(ins, types, producers)
+            if c is not None:
+                op, ob, wire = c
+                key = (op, ins.type_str.strip()[:64])
+                agg[key]["count"] += mult
+                agg[key]["wire"] += wire * mult
+                agg[key]["operand"] += ob * mult
+            callees = _CALLEE_RE.findall(ins.rest)
+            child = mult
+            if ins.opcode == "while":
+                mt = _TRIP_RE.search(ins.rest)
+                child = mult * (int(mt.group(1)) if mt else 1)
+            for cal in callees:
+                walk(cal, child, seen + (cname,))
+
+    walk(entry, 1.0, ())
+    rows = [{"op": k[0], "shape": k[1], **v} for k, v in agg.items()]
+    rows.sort(key=lambda r: -r["wire"])
+    return rows[:top]

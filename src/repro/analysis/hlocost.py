@@ -1,0 +1,376 @@
+"""Trip-count-aware cost analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any model
+using ``lax.scan`` (layer stacks, flash-attention chunks, SSD chunks, loss
+chunks) is undercounted by the trip count. This module re-derives
+
+  - MXU FLOPs (dot/convolution, x2 multiply-add),
+  - VPU FLOPs (elementwise / reduce ops),
+  - per-collective byte counts (operand bytes and ring wire-bytes),
+
+by walking the computation call graph (entry -> fusions/calls/while bodies)
+and multiplying each computation's cost by the product of enclosing loop
+trip counts (XLA records ``known_trip_count`` in while backend_config —
+every ``lax.scan`` gets one).
+
+All numbers are PER DEVICE (the module is the SPMD-partitioned program).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(
+    r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4|"
+    r"pred|c64|c128|token)\[([\d,]*)\]")
+
+# one instruction: "  %name = TYPE opcode(operands), attrs"
+# TYPE may be a tuple "(f32[..], /*index=5*/ s32[..])" (no nested parens).
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],{}\s/*]+?))\s*"
+    r"([\w\-]+)\((.*)$")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+(?:\([^)]*\)\s*->.*)?\{")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLEE_RE = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUP_RE1 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_RE2 = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "and", "or", "xor", "not", "negate", "abs", "exponential", "log",
+    "log-plus-one", "exponential-minus-one", "tanh", "sqrt", "rsqrt",
+    "cbrt", "sine", "cosine", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "is-finite", "select", "compare", "clamp",
+    "atan2", "erf", "logistic", "remainder", "shift-left",
+    "shift-right-arithmetic", "shift-right-logical", "popcnt", "clz",
+}
+ZERO_COST = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "transpose", "copy", "broadcast", "iota", "slice",
+    "dynamic-slice", "dynamic-update-slice", "concatenate", "reverse",
+    "pad", "convert", "after-all", "partition-id", "replica-id",
+    "rng-bit-generator", "rng", "copy-start", "copy-done", "bitcast-convert",
+    "all-gather-done", "all-reduce-done", "custom-call", "infeed", "outfeed",
+    "optimization-barrier", "get-dimension-size", "domain",
+}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _nelems(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def _type_bytes_elems(type_str: str) -> Tuple[int, int]:
+    total_b = total_e = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = _nelems(dims)
+        total_e += n
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_b, total_e
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operands + attributes (rest of the line)
+
+
+@dataclass
+class CostResult:
+    mxu_flops: float = 0.0
+    vpu_flops: float = 0.0
+    hbm_bytes: float = 0.0     # fusion-aware traffic (see _instr_bytes)
+    coll: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+    @property
+    def flops(self) -> float:
+        return self.mxu_flops + self.vpu_flops
+
+    @property
+    def coll_operand_bytes(self) -> float:
+        return sum(v["bytes_operand"] for v in self.coll.values())
+
+    @property
+    def coll_wire_bytes(self) -> float:
+        return sum(v["bytes_wire"] for v in self.coll.values())
+
+    def as_dict(self) -> Dict:
+        return {
+            "mxu_flops": self.mxu_flops,
+            "vpu_flops": self.vpu_flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collectives": self.coll,
+            "coll_operand_bytes": self.coll_operand_bytes,
+            "coll_wire_bytes": self.coll_wire_bytes,
+        }
+
+
+def _is_comp_header(line: str) -> bool:
+    # Computation headers sit at column 0 and end with "{"; instructions are
+    # indented. (Headers may contain "=" inside /*index=N*/ comments, so no
+    # "=" check.)
+    if not line.endswith("{"):
+        return False
+    return (line.startswith("ENTRY ") or line.startswith("%")
+            or bool(re.match(r"^[\w\.\-]+\s*\(", line)))
+
+
+def parse_computations(hlo: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if _is_comp_header(line):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            comps[cur].append(Instr(mi.group(1), mi.group(2), mi.group(3),
+                                    mi.group(4)))
+    return comps
+
+
+def _instr_cost(ins: Instr, types: Dict[str, str]) -> Tuple[float, float]:
+    """(mxu_flops, vpu_flops) for one instruction."""
+    op = ins.opcode
+    if op in ZERO_COST or op.startswith("all-") or op in (
+            "while", "conditional", "call", "fusion", "collective-permute",
+            "reduce-scatter"):
+        return 0.0, 0.0
+    out_b, out_e = _type_bytes_elems(ins.type_str)
+    if op == "dot":
+        mk = _DOT_DIMS_RE.search(ins.rest)
+        # operand 0 shape -> contracting dim sizes
+        ops = re.findall(r"%([\w\.\-]+)", ins.rest)
+        flops = 2.0 * out_e
+        if mk and ops:
+            lhs_t = types.get(ops[0], "")
+            sm = _SHAPE_RE.search(lhs_t)
+            if sm:
+                dims = [int(d) for d in sm.group(2).split(",") if d]
+                for ci in mk.group(1).split(","):
+                    if ci != "" and int(ci) < len(dims):
+                        flops *= dims[int(ci)]
+        return flops, 0.0
+    if op == "convolution":
+        # approximate: 2 * out_elems * (kernel elems) — rare in this code
+        ops = re.findall(r"%([\w\.\-]+)", ins.rest)
+        k_e = 1
+        if len(ops) >= 2:
+            _, k_e = _type_bytes_elems(types.get(ops[1], ""))
+        return 2.0 * out_e * max(k_e, 1), 0.0
+    if op in ("reduce", "reduce-window"):
+        ops = re.findall(r"%([\w\.\-]+)", ins.rest)
+        in_e = 0
+        if ops:
+            _, in_e = _type_bytes_elems(types.get(ops[0], ""))
+        return 0.0, float(max(in_e, out_e))
+    if op in ("scatter", "gather", "sort", "map", "select-and-scatter"):
+        return 0.0, float(out_e)
+    if op in ELEMENTWISE:
+        return 0.0, float(out_e)
+    # unknown op: treat as elementwise
+    return 0.0, float(out_e)
+
+
+def _operand_bytes(ins: Instr, types: Dict[str, str]) -> int:
+    total = 0
+    for ref in re.findall(r"%([\w\.\-]+)", ins.rest.split("),")[0] + ")"):
+        if ref in types:
+            b, _ = _type_bytes_elems(types[ref])
+            total += b
+    return total
+
+
+_BYTES_FREE = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "after-all", "partition-id", "replica-id", "iota",
+    "broadcast", "optimization-barrier", "get-dimension-size", "domain",
+    "bitcast-convert", "copy-start", "copy-done", "all-gather-done",
+    "all-reduce-done",
+}
+
+
+def _instr_bytes(ins: Instr, types: Dict[str, str]) -> float:
+    """Fusion-aware HBM traffic model: a fusion region touches its operands
+    + result once (internals are register/VMEM-resident); scatter/DUS are
+    read-modify-write of the UPDATE extent only (in-place); gathers touch
+    ~result-sized slices of their operand. while/call/conditional bodies
+    are handled by the walker (recursion x trip count), so cost 0 here."""
+    op = ins.opcode
+    if op in _BYTES_FREE or op in ("while", "conditional", "call"):
+        return 0.0
+    out_b, _ = _type_bytes_elems(ins.type_str)
+    if op in ("dynamic-update-slice", "scatter"):
+        # update operand is the last data operand; approximate with the
+        # smallest operand (indices are tiny, update < buffer)
+        refs = re.findall(r"%([\w\.\-]+)", ins.rest.split("),")[0] + ")")
+        sizes = sorted(_type_bytes_elems(types[r])[0]
+                       for r in refs if r in types)
+        upd = sizes[-2] if len(sizes) >= 2 else (sizes[0] if sizes else out_b)
+        return float(3 * min(upd, out_b))
+    if op in ("gather", "dynamic-slice", "slice"):
+        return float(2 * out_b)
+    if op.startswith("all-") or op in ("collective-permute", "reduce-scatter"):
+        return float(out_b + _operand_bytes(ins, types))
+    # fusion / dot / convolution / elementwise / reduce / sort / copy ...
+    return float(out_b + _operand_bytes(ins, types))
+
+
+def _effective_operand_bytes(ref: str, types: Dict[str, str],
+                             producers: Optional[Dict[str, "Instr"]]) -> int:
+    """Operand bytes for a collective, correcting XLA:CPU's bf16->f32
+    promotion: when the operand is produced by a convert(-fusion) whose own
+    input is narrower (bf16), a TPU build runs the collective at the narrow
+    dtype — count those bytes. (Verified in grok HLO: every activation/grad
+    all-reduce is f32 wrapping a bf16 dot via %convert_*_fusion.)"""
+    b, e = _type_bytes_elems(types.get(ref, ""))
+    if not producers or ref not in producers or e == 0:
+        return b
+    prod = producers[ref]
+    if prod.opcode == "convert" or "convert" in prod.name:
+        in_sizes = []
+        for r2 in re.findall(r"%([\w\.\-]+)", prod.rest.split(")")[0] + ")"):
+            if r2 in types:
+                b2, e2 = _type_bytes_elems(types[r2])
+                if e2:
+                    in_sizes.append(b2 / e2)
+        if in_sizes and min(in_sizes) < b / e:
+            return int(e * min(in_sizes))
+    return b
+
+
+def _collective_cost(ins: Instr, types: Dict[str, str],
+                     producers: Optional[Dict[str, "Instr"]] = None
+                     ) -> Optional[Tuple[str, int, float]]:
+    base = ins.opcode[:-6] if ins.opcode.endswith("-start") else ins.opcode
+    if base not in COLLECTIVES:
+        return None
+    g = 1
+    mg = _GROUP_RE1.search(ins.rest)
+    if mg:
+        g = int(mg.group(2))
+    else:
+        mg = _GROUP_RE2.search(ins.rest)
+        if mg:
+            g = len(mg.group(1).split(","))
+    ob = 0
+    for ref in re.findall(r"%([\w\.\-]+)", ins.rest.split(")")[0] + ")"):
+        if ref in types:
+            ob += _effective_operand_bytes(ref, types, producers)
+    if ob == 0:
+        rb, _ = _type_bytes_elems(ins.type_str)
+        if base == "all-gather":
+            ob = rb // max(g, 1)
+        elif base == "reduce-scatter":
+            ob = rb * g
+        else:
+            ob = rb
+    if base == "all-reduce":
+        wire = 2.0 * ob * (g - 1) / max(g, 1)
+    elif base == "all-gather":
+        wire = float(ob) * (g - 1)
+    elif base in ("reduce-scatter", "all-to-all"):
+        wire = ob * (g - 1) / max(g, 1)
+    else:
+        wire = float(ob)
+    return base, ob, wire
+
+
+def analyze_hlo(hlo: str, entry: Optional[str] = None,
+                bf16_collectives: bool = True) -> CostResult:
+    """bf16_collectives: XLA:CPU has no native bf16 matmul, so it promotes
+    the whole bf16 dataflow (dots, converts, collectives) to f32; a TPU
+    build of the same program communicates activations/grads in bf16. When
+    set, f32 collective bytes are counted at 2 B/elem. (Verified on grok:
+    every large AR operand is a convert-wrapped bf16 dot.)"""
+    comps = parse_computations(hlo)
+    # per-computation name->type map (params + instrs)
+    types_per_comp: Dict[str, Dict[str, str]] = {}
+    producers_per_comp: Dict[str, Dict[str, Instr]] = {}
+    for cname, instrs in comps.items():
+        t = {}
+        prod = {}
+        for ins in instrs:
+            t[ins.name] = ins.type_str
+            prod[ins.name] = ins
+        types_per_comp[cname] = t
+        producers_per_comp[cname] = prod
+
+    if entry is None:
+        m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+        entry = m.group(1) if m else next(iter(comps))
+
+    res = CostResult()
+    coll = defaultdict(lambda: {"count": 0.0, "bytes_operand": 0.0,
+                                "bytes_wire": 0.0})
+
+    def walk(cname: str, mult: float, seen: Tuple[str, ...],
+             count_bytes: bool):
+        if cname not in comps or cname in seen:
+            return
+        types = types_per_comp[cname]
+        producers = producers_per_comp[cname]
+        for ins in comps[cname]:
+            c = _collective_cost(ins, types, producers)
+            if c is not None:
+                base, ob, wire = c
+                if bf16_collectives and "f32[" in ins.type_str:
+                    ob *= 0.5
+                    wire *= 0.5
+                coll[base]["count"] += mult
+                coll[base]["bytes_operand"] += ob * mult
+                coll[base]["bytes_wire"] += wire * mult
+            mxu, vpu = _instr_cost(ins, types)
+            res.mxu_flops += mxu * mult
+            res.vpu_flops += vpu * mult
+            if count_bytes:
+                res.hbm_bytes += _instr_bytes(ins, types) * mult
+            # recurse into callees
+            callees = _CALLEE_RE.findall(ins.rest)
+            mb = _BRANCHES_RE.search(ins.rest)
+            if mb:
+                callees += [c.strip().lstrip("%") for c in mb.group(1).split(",")]
+            child_mult = mult
+            if ins.opcode == "while":
+                mt = _TRIP_RE.search(ins.rest)
+                child_mult = mult * (int(mt.group(1)) if mt else 1)
+            # bytes: count only at top level of while/call/cond bodies —
+            # a fusion's internals are VMEM-resident (already charged at
+            # the fusion instruction itself)
+            child_bytes = count_bytes and ins.opcode in (
+                "while", "call", "conditional")
+            for callee in callees:
+                walk(callee, child_mult, seen + (cname,), child_bytes)
+
+    walk(entry, 1.0, (), True)
+    res.coll = {k: dict(v) for k, v in coll.items()}
+    return res

@@ -1,0 +1,129 @@
+"""Three-term roofline from dry-run records (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, all terms PER DEVICE per step on TPU v5e:
+
+  compute    = max(mxu_flops / 197e12, vpu_flops / 3.9e12)   [s]
+  memory     = (argument + output + 2*temp bytes) / 819e9     [s]
+  collective = wire_bytes / 50e9                              [s]
+
+- FLOPs are the trip-count-corrected HLO counts (analysis/hlocost.py); the
+  VPU term matters for SSM/RG-LRU cells whose recurrences are elementwise.
+- The memory model: arguments are read once (params/opt/KV-cache/batch),
+  outputs written once, every live temp written+read once. It deliberately
+  excludes XLA:CPU's fusion-boundary noise (a TPU keeps those blocks in
+  VMEM); hlocost.hbm_bytes is the pessimistic upper bound where available.
+- wire_bytes uses ring-algorithm costs (2(g-1)/g for all-reduce etc.).
+
+step_time ~= max(terms) (perfect overlap) .. sum(terms) (no overlap).
+Roofline fraction := compute / sum(terms)  — the conservative (no-overlap)
+fraction of peak the cell achieves; 1.0 = pure compute-bound at peak.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+PEAK_MXU = 197e12      # bf16 FLOP/s per chip (v5e)
+PEAK_VPU = 3.9e12      # f32 vector FLOP/s per chip (8x128x4 @ 940 MHz)
+HBM_BW = 819e9         # B/s per chip
+ICI_BW = 50e9          # B/s per link
+HBM_CAP = 16 * 2 ** 30
+
+
+def roofline_terms(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    mem = rec["memory"]
+    mem_bytes = (mem["argument_bytes"] + mem["output_bytes"]
+                 + 2 * mem["temp_bytes"])
+    compute_mxu = rec["mxu_flops_per_device"] / PEAK_MXU
+    compute_vpu = rec["vpu_flops_per_device"] / PEAK_VPU
+    compute = max(compute_mxu, compute_vpu)
+    memory = mem_bytes / HBM_BW
+    coll = rec.get("coll_wire_bytes", 0.0) / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    total = sum(terms.values())
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute, "compute_mxu_s": compute_mxu,
+        "compute_vpu_s": compute_vpu,
+        "memory_s": memory, "collective_s": coll,
+        "dominant": dominant,
+        "step_time_lo_s": max(terms.values()),
+        "step_time_hi_s": total,
+        "roofline_fraction": compute / total if total > 0 else 0.0,
+        "mem_bytes_per_device": mem_bytes,
+        "fits_hbm": (mem["argument_bytes"] + mem["output_bytes"]
+                     - mem.get("alias_bytes", 0) + mem["temp_bytes"]) <= HBM_CAP,
+        "hbm_used_gib": (mem["argument_bytes"] + mem["output_bytes"]
+                         - mem.get("alias_bytes", 0)
+                         + mem["temp_bytes"]) / 2 ** 30,
+        # persistent working set (params/opt/caches/batch, no temps): the
+        # TPU-true usage lies between this and hbm_used_gib, whose temps
+        # include XLA:CPU's f32 staging copies of every bf16 weight
+        "hbm_lo_gib": (mem["argument_bytes"] + mem["output_bytes"]
+                       - mem.get("alias_bytes", 0)) / 2 ** 30,
+    }
+    # model-FLOPs utilisation bound: 6*N_active*D / (chips * HLO_FLOPs)
+    if rec.get("active_param_count") and rec["shape"] == "train_4k":
+        tokens = {"train_4k": 256 * 4096}.get(rec["shape"], 0)
+        model_flops = 6 * rec["active_param_count"] * tokens
+        hlo_global = rec["mxu_flops_per_device"] * rec["n_chips"]
+        out["model_flops"] = model_flops
+        out["model_over_hlo"] = model_flops / hlo_global if hlo_global else 0
+        # projected MFU (no-overlap): useful flops / (step_time * peak)
+        out["projected_mfu"] = (model_flops / rec["n_chips"] / total
+                                / PEAK_MXU if total else 0.0)
+    return out
+
+
+def load_records(*paths: str) -> List[Dict]:
+    recs = []
+    for p in paths:
+        try:
+            with open(p) as f:
+                for line in f:
+                    recs.append(json.loads(line))
+        except FileNotFoundError:
+            pass
+    # keep the LAST record per cell key (re-runs supersede)
+    by_key = {}
+    for r in recs:
+        by_key[(r["arch"], r["shape"], r["mesh"], r.get("tag", ""))] = r
+    return list(by_key.values())
+
+
+def table(records: List[Dict], mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for rec in records:
+        if rec.get("mesh") != mesh:
+            continue
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "dominant": "SKIP",
+                         "reason": rec.get("reason", "")})
+            continue
+        t = roofline_terms(rec)
+        if t:
+            rows.append(t)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def fmt_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | coll s | dominant | "
+           "roofline frac | HBM GiB | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r["dominant"] == "SKIP":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | "
+                       f"— | — | — |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4g} | "
+            f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.3f} | "
+            f"{r['hbm_used_gib']:.1f} | {'Y' if r['fits_hbm'] else 'N'} |\n")
+    return "".join(out)

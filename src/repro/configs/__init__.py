@@ -1,0 +1,12 @@
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    EncDecConfig,
+    HybridConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    get_config,
+    list_archs,
+    shape_applicable,
+)

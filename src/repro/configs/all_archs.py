@@ -1,0 +1,24 @@
+"""Import side-effect module that populates the arch registry."""
+import repro.configs.olmo_1b  # noqa: F401
+import repro.configs.chatglm3_6b  # noqa: F401
+import repro.configs.qwen2_1_5b  # noqa: F401
+import repro.configs.deepseek_coder_33b  # noqa: F401
+import repro.configs.mamba2_1_3b  # noqa: F401
+import repro.configs.deepseek_moe_16b  # noqa: F401
+import repro.configs.grok_1_314b  # noqa: F401
+import repro.configs.recurrentgemma_2b  # noqa: F401
+import repro.configs.qwen2_vl_72b  # noqa: F401
+import repro.configs.whisper_base  # noqa: F401
+
+ARCH_IDS = (
+    "olmo-1b",
+    "chatglm3-6b",
+    "qwen2-1.5b",
+    "deepseek-coder-33b",
+    "mamba2-1.3b",
+    "deepseek-moe-16b",
+    "grok-1-314b",
+    "recurrentgemma-2b",
+    "qwen2-vl-72b",
+    "whisper-base",
+)

@@ -1,0 +1,247 @@
+"""Typed model / run configuration for the repro framework.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`. The
+config is deliberately explicit (no HF-style inheritance magic): each field
+is consumed by exactly one model-family builder in ``repro.models``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Enums (plain strings; validated in __post_init__)
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+ROPE_VARIANTS = ("none", "rope", "rope2d", "mrope", "learned_abs")
+NORMS = ("rmsnorm", "layernorm", "nonparametric_ln")
+ACTIVATIONS = ("silu", "gelu", "gelu_tanh")
+ATTN_KINDS = ("full", "local")
+MOE_SHARDINGS = ("ep", "tp")
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts sub-config (DeepSeek-MoE / Grok style)."""
+
+    num_experts: int = 0              # routed experts
+    top_k: int = 0
+    d_ff_expert: int = 0              # per-expert FFN hidden dim
+    num_shared_experts: int = 0       # always-on experts (DeepSeek fine-grained)
+    # Layers that use a plain dense FFN instead of MoE (DeepSeek-MoE layer 0).
+    dense_layers: Tuple[int, ...] = ()
+    dense_layer_d_ff: int = 0
+    # Router options
+    router_softmax_order: str = "topk_then_softmax"  # or "softmax_then_topk"
+    capacity_factor: float = 1.25
+    # How expert weights shard over the "model" mesh axis:
+    #   "ep": expert dim sharded (requires num_experts % model_axis == 0)
+    #   "tp": per-expert FFN hidden dim sharded (megatron-style)
+    sharding: str = "ep"
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 (SSD) sub-config."""
+
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64                # SSD head dim (nheads = d_inner // head_dim)
+    n_groups: int = 1
+    chunk_size: int = 256             # SSD block-decomposition chunk
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """RecurrentGemma-style hybrid (RG-LRU + local attention)."""
+
+    # Repeating block pattern, e.g. ("rglru", "rglru", "local_attn").
+    pattern: Tuple[str, ...] = ("rglru", "rglru", "local_attn")
+    lru_width: int = 0                # 0 -> d_model
+    window: int = 2048                # local attention window
+    conv_width: int = 4               # temporal conv inside recurrent block
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    """Encoder-decoder (Whisper) sub-config."""
+
+    encoder_layers: int = 0
+    max_source_positions: int = 0     # encoder frame positions (learned abs)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # -- identity ----------------------------------------------------------
+    name: str = "unnamed"
+    family: str = "dense"
+    # -- trunk dimensions ---------------------------------------------------
+    num_layers: int = 0
+    d_model: int = 0
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0                 # 0 -> d_model // num_heads
+    d_ff: int = 0
+    vocab_size: int = 0
+    # -- flavour knobs -------------------------------------------------------
+    rope: str = "rope"
+    rope_theta: float = 10000.0
+    # M-RoPE sections (temporal, height, width) in head_dim/2 units.
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    qkv_bias: bool = False
+    norm: str = "rmsnorm"
+    norm_eps: float = 1e-5
+    activation: str = "silu"
+    gated_mlp: bool = True            # SwiGLU/GeGLU vs plain 2-layer MLP
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0        # grok/gemma-style tanh soft-capping
+    attn_logit_softcap: float = 0.0
+    embedding_scale: bool = False     # multiply embeddings by sqrt(d_model)
+    # -- sub-configs ---------------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    # -- execution knobs ------------------------------------------------------
+    dtype: str = "bfloat16"           # compute dtype
+    param_dtype: str = "float32"      # master param dtype
+    scan_layers: bool = True
+    remat: bool = True
+    remat_policy: str = "nothing_saveable"
+    attn_chunk_q: int = 1024          # flash-style chunking of the query dim
+    attn_chunk_kv: int = 1024
+    loss_chunk: int = 2048            # sequence chunking of the CE loss
+    zero1: bool = False               # shard optimizer state over "data"
+    fsdp: bool = False                # shard params over "data" too (ZeRO-3)
+    microbatches: int = 1             # gradient-accumulation chunks
+    # Whether full (non-windowed) attention makes long_500k tractable.
+    subquadratic: bool = False
+    # Modality frontend stub: inputs are precomputed embeddings, not token ids.
+    embeds_input: bool = False
+    # M-RoPE position ids have a leading (3,) axis.
+    mrope_input: bool = False
+
+    # -- derived -------------------------------------------------------------
+    def __post_init__(self):
+        assert self.family in FAMILIES, self.family
+        assert self.rope in ROPE_VARIANTS, self.rope
+        assert self.norm in NORMS, self.norm
+        assert self.activation in ACTIVATIONS, self.activation
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def kv_groups(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    def param_count(self) -> int:
+        """Approximate dense parameter count N (for 6ND model-FLOPs)."""
+        d, L, V = self.d_model, self.num_layers, self.vocab_size
+        hd = self.head_dim
+        nh, nkv = self.num_heads, self.num_kv_heads
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":
+            s = self.ssm
+            d_in = s.expand * d
+            nheads = d_in // s.head_dim
+            per = (
+                d * (2 * d_in + 2 * s.n_groups * s.d_state + nheads)  # in_proj
+                + (d_in + 2 * s.n_groups * s.d_state) * s.d_conv      # conv
+                + nheads * 2                                           # A, D
+                + d_in                                                 # norm-ish
+                + d_in * d                                             # out_proj
+            )
+            return emb + L * per
+        attn = d * (nh * hd) + d * (2 * nkv * hd) + (nh * hd) * d
+        mlp_mult = 3 if self.gated_mlp else 2
+        if self.family == "moe":
+            m = self.moe
+            n_moe = L - len(m.dense_layers)
+            moe_mlp = (m.num_experts + m.num_shared_experts) * mlp_mult * d * m.d_ff_expert
+            moe_mlp += d * m.num_experts  # router
+            dense_mlp = mlp_mult * d * (m.dense_layer_d_ff or self.d_ff)
+            return emb + L * attn + n_moe * moe_mlp + len(m.dense_layers) * dense_mlp
+        if self.family == "hybrid":
+            h = self.hybrid
+            w = h.lru_width or d
+            n_att = sum(1 for i in range(L) if h.pattern[i % len(h.pattern)] == "local_attn")
+            n_rec = L - n_att
+            rec = d * w * 2 + w * h.conv_width + w * 4 + w * d  # in/out proj + gates
+            return emb + n_att * (attn + mlp_mult * d * self.d_ff) + n_rec * (rec + mlp_mult * d * self.d_ff)
+        if self.family == "audio":
+            e = self.encdec
+            enc = e.encoder_layers * (attn + mlp_mult * d * self.d_ff)
+            dec = L * (attn * 2 + mlp_mult * d * self.d_ff)  # self + cross attn
+            return emb + enc + dec
+        return emb + L * (attn + mlp_mult * d * self.d_ff)
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: only routed top-k count)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, L, V = self.d_model, self.num_layers, self.vocab_size
+        hd, nh, nkv = self.head_dim, self.num_heads, self.num_kv_heads
+        m = self.moe
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        attn = d * (nh * hd) + d * (2 * nkv * hd) + (nh * hd) * d
+        mlp_mult = 3 if self.gated_mlp else 2
+        n_moe = L - len(m.dense_layers)
+        act_mlp = (m.top_k + m.num_shared_experts) * mlp_mult * d * m.d_ff_expert
+        dense_mlp = mlp_mult * d * (m.dense_layer_d_ff or self.d_ff)
+        return emb + L * attn + n_moe * act_mlp + len(m.dense_layers) * dense_mlp
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes assigned to the LM family (seq_len x global_batch).
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether a (arch x shape) cell runs; reason string if skipped."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "long_500k needs sub-quadratic attention; %s is full-attention" % cfg.name
+    return True, ""
+
+
+# Registry filled by the per-arch modules.
+_REGISTRY: dict = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    import repro.configs.all_archs  # noqa: F401  (populates registry)
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> Sequence[str]:
+    import repro.configs.all_archs  # noqa: F401
+
+    return sorted(_REGISTRY)

@@ -1,0 +1,23 @@
+"""ChatGLM3-6B [arXiv:2406.12793]: 28L d_model=4096 32H (GQA kv=2)
+d_ff=13696 vocab=65024 — 2D RoPE (applied to half the head dim), QKV bias,
+RMSNorm, SwiGLU."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="chatglm3-6b",
+    family="dense",
+    num_layers=28,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,
+    d_ff=13696,
+    vocab_size=65024,
+    rope="rope2d",
+    rope_theta=10000.0,
+    qkv_bias=True,
+    norm="rmsnorm",
+    activation="silu",
+    gated_mlp=True,
+    zero1=True,
+    microbatches=4,
+))

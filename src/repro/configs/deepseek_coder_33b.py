@@ -1,0 +1,23 @@
+"""DeepSeek-Coder-33B [arXiv:2401.14196]: 62L d_model=7168 56H (GQA kv=8)
+d_ff=19200 vocab=32256 — llama architecture (RoPE, RMSNorm, SwiGLU)."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    num_layers=62,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=19200,
+    vocab_size=32256,
+    rope="rope",
+    rope_theta=100000.0,
+    qkv_bias=False,
+    norm="rmsnorm",
+    activation="silu",
+    gated_mlp=True,
+    zero1=True,
+    fsdp=True,
+    microbatches=16,
+))

@@ -1,0 +1,33 @@
+"""DeepSeek-MoE-16B [arXiv:2401.06066]: 28L d_model=2048 16H (MHA)
+d_ff_expert=1408 vocab=102400 — fine-grained MoE: 64 routed experts top-6 +
+2 shared experts; layer 0 uses a dense FFN (d_ff=10944)."""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=102400,
+    rope="rope",
+    rope_theta=10000.0,
+    norm="rmsnorm",
+    activation="silu",
+    gated_mlp=True,
+    moe=MoEConfig(
+        num_experts=64,
+        top_k=6,
+        d_ff_expert=1408,
+        num_shared_experts=2,
+        dense_layers=(0,),
+        dense_layer_d_ff=10944,
+        router_softmax_order="softmax_then_topk",
+        sharding="ep",          # 64 experts shard cleanly over model=16
+    ),
+    zero1=True,
+    fsdp=True,
+    microbatches=4,
+))

@@ -1,0 +1,37 @@
+"""Grok-1-314B [hf:xai-org/grok-1]: 64L d_model=6144 48H (GQA kv=8)
+d_ff=32768 vocab=131072 — MoE 8 experts top-2, gelu MLP, attention/output
+logit soft-capping, embedding scaling."""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=32768,
+    vocab_size=131072,
+    rope="rope",
+    rope_theta=10000.0,
+    norm="rmsnorm",
+    activation="gelu",
+    gated_mlp=True,
+    logit_softcap=30.0,
+    attn_logit_softcap=30.0,
+    embedding_scale=True,
+    moe=MoEConfig(
+        num_experts=8,
+        top_k=2,
+        d_ff_expert=32768,
+        num_shared_experts=0,
+        sharding="tp",          # 8 experts < model axis 16 -> megatron-style
+    ),
+    zero1=True,
+    fsdp=True,
+    microbatches=8,
+    # 314B params: f32 master + f32 moments = 5 TB of state, which cannot
+    # fit 256 x 16 GiB even perfectly sharded. Low-mem recipe: bf16 master
+    # params, bf16 Adam moments (f32 compute), bf16 grad accumulation.
+    param_dtype="bfloat16",
+))

@@ -1,0 +1,24 @@
+"""Mamba2-1.3B [arXiv:2405.21060]: 48L d_model=2048 attention-free,
+vocab=50280, ssm_state=128 — SSD (state-space duality) with chunked
+block-decomposition. Sub-quadratic: runs long_500k."""
+from repro.configs.base import ModelConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    rope="none",
+    norm="rmsnorm",
+    gated_mlp=False,
+    tie_embeddings=True,
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, n_groups=1,
+                  chunk_size=256),
+    subquadratic=True,
+    zero1=True,
+    microbatches=4,
+))

@@ -1,0 +1,21 @@
+"""OLMo-1B [arXiv:2402.00838]: 16L d_model=2048 16H (MHA) d_ff=8192
+vocab=50304 — non-parametric LayerNorm, RoPE, SwiGLU, no biases."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="olmo-1b",
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=50304,
+    rope="rope",
+    rope_theta=10000.0,
+    qkv_bias=False,
+    norm="nonparametric_ln",
+    activation="silu",
+    gated_mlp=True,
+    tie_embeddings=True,
+))

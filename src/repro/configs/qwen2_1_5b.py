@@ -1,0 +1,22 @@
+"""Qwen2-1.5B [arXiv:2407.10671]: 28L d_model=1536 12H (GQA kv=2)
+d_ff=8960 vocab=151936 — GQA, QKV bias, RoPE theta=1e6, tied embeddings."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-1.5b",
+    family="dense",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151936,
+    rope="rope",
+    rope_theta=1000000.0,
+    qkv_bias=True,
+    norm="rmsnorm",
+    activation="silu",
+    gated_mlp=True,
+    tie_embeddings=True,
+    microbatches=2,
+))

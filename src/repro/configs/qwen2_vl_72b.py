@@ -1,0 +1,28 @@
+"""Qwen2-VL-72B [arXiv:2409.12191]: 80L d_model=8192 64H (GQA kv=8)
+d_ff=29568 vocab=152064 — M-RoPE (multimodal 3-section rotary), dynamic
+resolution. The vision tower is a STUB: input_specs() provides precomputed
+patch embeddings merged into the token stream plus (3, B, S) M-RoPE ids."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    rope="mrope",
+    rope_theta=1000000.0,
+    mrope_sections=(16, 24, 24),
+    qkv_bias=True,
+    norm="rmsnorm",
+    activation="silu",
+    gated_mlp=True,
+    embeds_input=True,
+    mrope_input=True,
+    zero1=True,
+    fsdp=True,
+    microbatches=16,
+))

@@ -1,0 +1,31 @@
+"""RecurrentGemma-2B [arXiv:2402.19427]: 26L d_model=2560 10H (MQA kv=1)
+d_ff=7680 vocab=256000 — RG-LRU recurrent blocks + local attention (window
+2048) in a 2:1 pattern. Sub-quadratic: runs long_500k."""
+from repro.configs.base import ModelConfig, HybridConfig, register
+
+CONFIG = register(ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    rope="rope",
+    rope_theta=10000.0,
+    norm="rmsnorm",
+    activation="gelu_tanh",
+    gated_mlp=True,
+    tie_embeddings=True,
+    embedding_scale=True,
+    hybrid=HybridConfig(
+        pattern=("rglru", "rglru", "local_attn"),
+        lru_width=2560,
+        window=2048,
+        conv_width=4,
+    ),
+    subquadratic=True,
+    microbatches=4,
+))

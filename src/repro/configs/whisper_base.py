@@ -1,0 +1,25 @@
+"""Whisper-base [arXiv:2212.04356]: enc-dec, 6L decoder (+6L encoder)
+d_model=512 8H (MHA) d_ff=2048 vocab=51865 — learned absolute positions,
+parametric LayerNorm, gelu MLP (non-gated). The conv audio frontend is a
+STUB: input_specs() provides precomputed frame embeddings."""
+from repro.configs.base import EncDecConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,                 # decoder layers
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    rope="learned_abs",
+    qkv_bias=True,                # whisper uses biased q/v projections
+    norm="layernorm",
+    activation="gelu",
+    gated_mlp=False,
+    tie_embeddings=True,
+    encdec=EncDecConfig(encoder_layers=6, max_source_positions=32768),
+    embeds_input=True,
+    microbatches=4,
+))

@@ -1,0 +1,104 @@
+"""Host-side partitioned event log — the Kafka/MSK analogue (DESIGN.md §2).
+
+Topics with partitions, append offsets, and consumer groups: enough to
+model GPFS mmwatch fileset topics, the audit topic the primary pipeline
+publishes ingest-request IDs to, and the monitor's update-notification
+topic. Persistence (optional) uses msgpack+zstd segment files, giving the
+monitor crash-recovery of unconsumed events.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import os
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+import msgpack
+import zstandard as zstd
+
+
+class Partition:
+    def __init__(self):
+        self.records: List[bytes] = []
+
+    def append(self, payload: Any) -> int:
+        self.records.append(msgpack.packb(payload, use_bin_type=True))
+        return len(self.records) - 1
+
+    def read(self, offset: int, max_n: int = 1024) -> List[Any]:
+        out = self.records[offset: offset + max_n]
+        return [msgpack.unpackb(r, raw=False) for r in out]
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+
+class Topic:
+    def __init__(self, name: str, n_partitions: int = 1):
+        self.name = name
+        self.partitions = [Partition() for _ in range(n_partitions)]
+
+    def produce(self, payload: Any, key: Optional[int] = None) -> Tuple[int, int]:
+        p = (key if key is not None else 0) % len(self.partitions)
+        off = self.partitions[p].append(payload)
+        return p, off
+
+    def __len__(self) -> int:
+        return sum(len(p) for p in self.partitions)
+
+
+class EventLog:
+    """Broker: topics + consumer-group offsets."""
+
+    def __init__(self):
+        self.topics: Dict[str, Topic] = {}
+        self.offsets: Dict[Tuple[str, str, int], int] = {}
+
+    def topic(self, name: str, n_partitions: int = 1) -> Topic:
+        if name not in self.topics:
+            self.topics[name] = Topic(name, n_partitions)
+        return self.topics[name]
+
+    def consume(self, topic: str, group: str, partition: int = 0,
+                max_n: int = 1024) -> List[Any]:
+        t = self.topics[topic]
+        key = (topic, group, partition)
+        off = self.offsets.get(key, 0)
+        recs = t.partitions[partition].read(off, max_n)
+        self.offsets[key] = off + len(recs)
+        return recs
+
+    def lag(self, topic: str, group: str) -> int:
+        t = self.topics[topic]
+        return sum(len(p) - self.offsets.get((topic, group, i), 0)
+                   for i, p in enumerate(t.partitions))
+
+    # -- persistence (crash recovery) ----------------------------------------
+
+    def save(self, path: str) -> None:
+        data = {
+            name: [p.records for p in t.partitions]
+            for name, t in self.topics.items()
+        }
+        blob = msgpack.packb({
+            "topics": data,
+            "offsets": {"|".join(map(str, k)): v
+                        for k, v in self.offsets.items()},
+        }, use_bin_type=True)
+        with open(path, "wb") as f:
+            f.write(zstd.ZstdCompressor(level=3).compress(blob))
+
+    @classmethod
+    def load(cls, path: str) -> "EventLog":
+        with open(path, "rb") as f:
+            blob = zstd.ZstdDecompressor().decompress(f.read())
+        raw = msgpack.unpackb(blob, raw=False)
+        log = cls()
+        for name, parts in raw["topics"].items():
+            t = log.topic(name, len(parts))
+            for p, recs in zip(t.partitions, parts):
+                p.records = list(recs)
+        for k, v in raw["offsets"].items():
+            topic, group, part = k.split("|")
+            log.offsets[(topic, group, int(part))] = v
+        return log

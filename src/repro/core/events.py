@@ -1,0 +1,195 @@
+"""Changelog event model + workload generators.
+
+Event types follow Lustre changelog opcodes (the subset Icicle processes);
+GPFS mmwatch events map onto the same internal schema with ``has_stat=1``
+(GPFS carries stat info in the event — paper §V-B4 credits this for the
+GPFS monitor's higher throughput, since it avoids per-file ``stat``).
+
+Batches are struct-of-arrays (numpy on the host ring buffer, jnp on
+device) so the reduction rules are data-parallel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+# Lustre-style opcodes (subset)
+E_CREAT = 0    # 01CREAT
+E_MKDIR = 1    # 02MKDIR
+E_UNLNK = 2    # 06UNLNK
+E_RMDIR = 3    # 07RMDIR
+E_RENME = 4    # 08RENME
+E_OPEN = 5     # 10OPEN   (high-volume, low-information — filterable)
+E_CLOSE = 6    # 11CLOSE
+E_SATTR = 7    # 14SATTR  (setattr / metadata update)
+E_WRITE = 8    # content modification (GPFS IN_MODIFY analogue)
+
+N_EVENT_TYPES = 9
+
+EVENT_NAMES = {
+    E_CREAT: "CREAT", E_MKDIR: "MKDIR", E_UNLNK: "UNLNK", E_RMDIR: "RMDIR",
+    E_RENME: "RENME", E_OPEN: "OPEN", E_CLOSE: "CLOSE", E_SATTR: "SATTR",
+    E_WRITE: "WRITE",
+}
+
+FIELDS = ("seq", "etype", "fid", "parent_fid", "new_parent_fid", "name_hash",
+          "is_dir", "has_stat", "size", "mtime")
+
+
+def empty_batch(n: int) -> Dict[str, np.ndarray]:
+    return {
+        "seq": np.zeros(n, np.int64),
+        "etype": np.full(n, E_OPEN, np.int32),
+        "fid": np.zeros(n, np.int32),
+        "parent_fid": np.full(n, -1, np.int32),
+        "new_parent_fid": np.full(n, -1, np.int32),
+        "name_hash": np.zeros(n, np.uint32),
+        "is_dir": np.zeros(n, np.int32),
+        "has_stat": np.zeros(n, np.int32),
+        "size": np.zeros(n, np.float32),
+        "mtime": np.zeros(n, np.float32),
+    }
+
+
+class EventStream:
+    """Append-only event source with monotone sequence numbers (one per MDT
+    / fileset)."""
+
+    def __init__(self, start_fid: int = 1):
+        self._events: List[Tuple] = []
+        self._seq = 0
+        self._next_fid = start_fid
+
+    def alloc_fid(self) -> int:
+        fid = self._next_fid
+        self._next_fid += 1
+        return fid
+
+    def emit(self, etype: int, fid: int, parent_fid: int = -1,
+             new_parent_fid: int = -1, name_hash: int = 0, is_dir: int = 0,
+             has_stat: int = 0, size: float = 0.0, mtime: float = 0.0):
+        self._seq += 1
+        self._events.append((self._seq, etype, fid, parent_fid,
+                             new_parent_fid, name_hash, is_dir, has_stat,
+                             size, mtime))
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def take(self, n: Optional[int] = None) -> Dict[str, np.ndarray]:
+        ev = self._events if n is None else self._events[:n]
+        self._events = [] if n is None else self._events[n:]
+        out = empty_batch(len(ev))
+        if ev:
+            arr = np.array(ev, np.float64)
+            for i, f in enumerate(FIELDS):
+                out[f] = arr[:, i].astype(out[f].dtype)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Workload generators (paper §V-B2/§V-B3)
+# ---------------------------------------------------------------------------
+
+def eval_out_workload(stream: EventStream, iterations: int, root_fid: int = 0,
+                      seed: int = 0) -> None:
+    """FSMonitor's evaluate-output workload: per iteration — create file,
+    append, rename it, mkdir, move file into dir, recursively delete."""
+    rng = np.random.default_rng(seed)
+    for i in range(iterations):
+        f = stream.alloc_fid()
+        stream.emit(E_CREAT, f, root_fid, name_hash=rng.integers(1 << 31))
+        stream.emit(E_CLOSE, f, root_fid)
+        stream.emit(E_SATTR, f, root_fid)                      # append
+        stream.emit(E_RENME, f, root_fid, root_fid,
+                    name_hash=rng.integers(1 << 31))           # rename file
+        d = stream.alloc_fid()
+        stream.emit(E_MKDIR, d, root_fid, name_hash=rng.integers(1 << 31),
+                    is_dir=1)
+        stream.emit(E_RENME, f, root_fid, d)                   # move into dir
+        stream.emit(E_UNLNK, f, d)                             # rm -r
+        stream.emit(E_RMDIR, d, root_fid, is_dir=1)
+
+
+def eval_perf_workload(stream: EventStream, iterations: int,
+                       root_fid: int = 0, seed: int = 0) -> None:
+    """FSMonitor's evaluate-performance workload: create-modify-delete
+    cycles — changelogs dominated by CREAT/OPEN/CLOSE/UNLNK."""
+    rng = np.random.default_rng(seed)
+    for i in range(iterations):
+        f = stream.alloc_fid()
+        stream.emit(E_CREAT, f, root_fid, name_hash=rng.integers(1 << 31))
+        stream.emit(E_OPEN, f, root_fid)
+        stream.emit(E_CLOSE, f, root_fid)
+        stream.emit(E_SATTR, f, root_fid)
+        stream.emit(E_UNLNK, f, root_fid)
+
+
+def filebench_workload(stream: EventStream, n_files: int, n_ops: int,
+                       root_fid: int = 0, seed: int = 0,
+                       has_stat: int = 0) -> np.ndarray:
+    """Filebench-style (§V-B3): pre-populate a tree (mean dir width 20,
+    depth ~3.6), then open-read-close on random files. Returns the fid
+    array of created files."""
+    rng = np.random.default_rng(seed)
+    dirs = [root_fid]
+    depth = {root_fid: 0}
+    fids = np.zeros(n_files, np.int64)
+    for i in range(n_files):
+        if len(dirs) < max(4, n_files // 20) and rng.random() < 0.05:
+            d = stream.alloc_fid()
+            parent = int(rng.choice(dirs))
+            if depth[parent] < 6:
+                stream.emit(E_MKDIR, d, parent, is_dir=1,
+                            name_hash=rng.integers(1 << 31))
+                dirs.append(d)
+                depth[d] = depth[parent] + 1
+        f = stream.alloc_fid()
+        parent = int(rng.choice(dirs))
+        size = float(rng.gamma(1.5, 16e3 / 1.5))
+        stream.emit(E_CREAT, f, parent, name_hash=rng.integers(1 << 31),
+                    has_stat=has_stat, size=size)
+        stream.emit(E_CLOSE, f, parent, has_stat=has_stat, size=size)
+        fids[i] = f
+    targets = rng.integers(0, n_files, n_ops)
+    for t in targets:
+        f = int(fids[t])
+        stream.emit(E_OPEN, f)
+        stream.emit(E_CLOSE, f, has_stat=has_stat)
+    return fids
+
+
+def mixed_workload(stream: EventStream, n_ops: int, root_fid: int = 0,
+                   seed: int = 0, rename_frac: float = 0.01) -> None:
+    """Random mix including directory renames (exercises rename-override)."""
+    rng = np.random.default_rng(seed)
+    dirs = [root_fid]
+    files: List[int] = []
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.30 or not files:
+            f = stream.alloc_fid()
+            stream.emit(E_CREAT, f, int(rng.choice(dirs)),
+                        name_hash=rng.integers(1 << 31))
+            files.append(f)
+        elif r < 0.45:
+            stream.emit(E_SATTR, int(rng.choice(files)))
+        elif r < 0.55:
+            f = files.pop(int(rng.integers(len(files))))
+            stream.emit(E_UNLNK, f)
+        elif r < 0.60:
+            d = stream.alloc_fid()
+            stream.emit(E_MKDIR, d, int(rng.choice(dirs)), is_dir=1,
+                        name_hash=rng.integers(1 << 31))
+            dirs.append(d)
+        elif r < 0.60 + rename_frac and len(dirs) > 2:
+            d = int(rng.choice(dirs[1:]))
+            stream.emit(E_RENME, d, int(rng.choice(dirs)),
+                        int(rng.choice(dirs)), is_dir=1,
+                        name_hash=rng.integers(1 << 31))
+        else:
+            f = int(rng.choice(files))
+            stream.emit(E_OPEN, f)
+            stream.emit(E_CLOSE, f)

@@ -1,0 +1,126 @@
+"""Device-resident directory hierarchy with pointer-jumping path ops.
+
+The paper's state manager resolves paths by recursive descent over an
+in-memory dict and recursively re-paths descendants on directory renames.
+The TPU-native replacement (DESIGN.md §2) keeps ``parent[fid]`` /
+``name_hash[fid]`` as dense arrays and computes *every* node's path hash by
+pointer doubling in O(log depth) vectorized rounds:
+
+    H(v) = sum_i name(a_i) * P^(depth(v)-depth(a_i))   (mod 2^32)
+
+which is associative in the (link, acc, plen) carry, so a rename's effect
+on all descendants falls out of one re-computation + diff — no recursion.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+P_MIX = jnp.uint32(16777619)  # FNV prime; path hash is polynomial in P_MIX
+
+
+def init_hierarchy(max_fids: int) -> Dict[str, jax.Array]:
+    """fid-indexed state. Row ``max_fids`` is the virtual absorbing root."""
+    m = max_fids
+    return {
+        "parent": jnp.full(m, -1, jnp.int32),
+        "name_hash": jnp.zeros(m, jnp.uint32),
+        "exists": jnp.zeros(m, jnp.bool_),
+        "is_dir": jnp.zeros(m, jnp.bool_),
+        "path_hash": jnp.zeros(m, jnp.uint32),  # last published path hashes
+    }
+
+
+def _pow_u32(base: jax.Array, exp: jax.Array, rounds: int = 32) -> jax.Array:
+    """base ** exp (mod 2^32) by square-and-multiply; exp < 2^rounds."""
+    result = jnp.ones_like(base)
+    b = base
+    e = exp
+    for _ in range(rounds):
+        result = jnp.where((e & 1) == 1, result * b, result)
+        b = b * b
+        e = e >> 1
+    return result
+
+
+def path_hash_all(parent: jax.Array, name_hash: jax.Array,
+                  max_depth: int = 64) -> jax.Array:
+    """Path hash for every node, in ceil(log2(max_depth)) jump rounds."""
+    m = parent.shape[0]
+    # virtual root row m: self-loop, zero name
+    link = jnp.where(parent < 0, m, parent)
+    link = jnp.concatenate([link, jnp.array([m], jnp.int32)])
+    acc = jnp.concatenate([name_hash, jnp.array([0], jnp.uint32)])
+    plen = jnp.concatenate([jnp.ones(m, jnp.uint32),
+                            jnp.array([0], jnp.uint32)])  # segment length
+    rounds = max(1, (max_depth - 1).bit_length())
+    pow_rounds = max(1, max_depth.bit_length() + 1)
+    for _ in range(rounds):
+        acc_l = acc[link]
+        plen_l = plen[link]
+        # prepend the ancestor segment: H = H_anc * P^len(self) + H_self
+        acc = acc_l * _pow_u32(jnp.broadcast_to(P_MIX, acc.shape), plen,
+                               pow_rounds) + acc
+        plen = plen + plen_l
+        link = link[link]
+    return acc[:m]
+
+
+def path_hash_for_fids(parent: jax.Array, name_hash: jax.Array,
+                       fids: jax.Array, max_depth: int = 64) -> jax.Array:
+    """Path hash for a SUBSET of nodes by upward walk — O(batch x depth),
+    used on the rename-free fast path (no full-table recompute)."""
+    acc = name_hash[fids]
+    link = parent[fids]
+    p = jnp.full_like(acc, 1).astype(jnp.uint32) * P_MIX
+    for _ in range(max_depth):
+        live = link >= 0
+        idx = jnp.maximum(link, 0)
+        acc = jnp.where(live, name_hash[idx] * p + acc, acc)
+        p = jnp.where(live, p * P_MIX, p)
+        link = jnp.where(live, parent[idx], link)
+    return acc
+
+
+def depth_all(parent: jax.Array, max_depth: int = 64) -> jax.Array:
+    m = parent.shape[0]
+    link = jnp.where(parent < 0, m, parent)
+    link = jnp.concatenate([link, jnp.array([m], jnp.int32)])
+    d = jnp.concatenate([jnp.where(parent < 0, 0, 1).astype(jnp.int32),
+                         jnp.array([0], jnp.int32)])
+    rounds = max(1, (max_depth - 1).bit_length())
+    for _ in range(rounds):
+        d = d + d[link]
+        link = link[link]
+    return d[:m]
+
+
+def is_descendant_of(parent: jax.Array, roots_mask: jax.Array,
+                     max_depth: int = 64) -> jax.Array:
+    """Boolean mask: node has an ancestor (or itself) in roots_mask."""
+    m = parent.shape[0]
+    link = jnp.where(parent < 0, m, parent)
+    link = jnp.concatenate([link, jnp.array([m], jnp.int32)])
+    mark = jnp.concatenate([roots_mask, jnp.array([False])])
+    rounds = max(1, (max_depth - 1).bit_length())
+    for _ in range(rounds):
+        mark = mark | mark[link]
+        link = link[link]
+    return mark[:m]
+
+
+def resolve_paths_host(parent, name, fids) -> list:
+    """Host-side string resolution (reference monitor only)."""
+    out = []
+    for f in fids:
+        parts = []
+        v = int(f)
+        guard = 0
+        while v >= 0 and guard < 256:
+            parts.append(name.get(v, f"#{v}"))
+            v = parent.get(v, -1)
+            guard += 1
+        out.append("/" + "/".join(reversed(parts)))
+    return out

@@ -1,0 +1,156 @@
+"""Unified metadata model (paper Table II) as a columnar struct-of-arrays.
+
+Paths are host-side (numpy object arrays) — TPUs do not process strings;
+devices operate on fixed-width hashes and integer columns (DESIGN.md §2,
+"changed assumptions"). Sizes/timestamps are float32 on device: DDSketch is
+relative-error so the 2^-24 mantissa is far below sketch error.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+TYPE_FILE = 0
+TYPE_LINK = 1
+TYPE_DIR = 2
+
+
+def crc32_shard(payload: bytes, n_shards: int = 64) -> int:
+    """The paper's shard function: zlib.crc32 over the row's UTF-8 bytes."""
+    return zlib.crc32(payload) % n_shards
+
+
+def path_hash(path: str) -> int:
+    """FNV-1a 32-bit (device kernel hashshard mirrors this)."""
+    h = 0x811C9DC5
+    for b in path.encode("utf-8", "surrogatepass"):
+        h ^= b
+        h = (h * 0x01000193) & 0xFFFFFFFF
+    return h
+
+
+@dataclasses.dataclass
+class MetadataTable:
+    """Columnar table of file-system objects."""
+
+    paths: np.ndarray          # (N,) object — host only
+    path_hash: np.ndarray      # (N,) uint32
+    parent: np.ndarray         # (N,) int64 — row index of parent dir (-1 root)
+    depth: np.ndarray          # (N,) int32
+    type: np.ndarray           # (N,) int32
+    mode: np.ndarray           # (N,) int32 (octal permission bits)
+    uid: np.ndarray            # (N,) int32
+    gid: np.ndarray            # (N,) int32
+    size: np.ndarray           # (N,) float64 host / float32 device
+    atime: np.ndarray          # (N,) float64
+    ctime: np.ndarray          # (N,) float64
+    mtime: np.ndarray          # (N,) float64
+    fileset: np.ndarray        # (N,) int32 (GPFS only; -1 elsewhere)
+
+    def __len__(self) -> int:
+        return len(self.paths)
+
+    def select(self, mask: np.ndarray) -> "MetadataTable":
+        return MetadataTable(**{f.name: getattr(self, f.name)[mask]
+                                for f in dataclasses.fields(self)})
+
+    def device_columns(self) -> Dict[str, np.ndarray]:
+        """The numeric view shipped to devices (no strings)."""
+        return {
+            "path_hash": self.path_hash.astype(np.uint32),
+            "parent": self.parent.astype(np.int32),
+            "depth": self.depth.astype(np.int32),
+            "type": self.type.astype(np.int32),
+            "mode": self.mode.astype(np.int32),
+            "uid": self.uid.astype(np.int32),
+            "gid": self.gid.astype(np.int32),
+            "size": self.size.astype(np.float32),
+            "atime": self.atime.astype(np.float32),
+            "ctime": self.ctime.astype(np.float32),
+            "mtime": self.mtime.astype(np.float32),
+            "fileset": self.fileset.astype(np.int32),
+        }
+
+
+def synth_filesystem(
+    n_files: int,
+    n_users: int = 32,
+    n_groups: int = 8,
+    n_dirs: int = 200,
+    max_depth: int = 6,
+    seed: int = 0,
+    now: float = 1.7e9,
+    size_dist: str = "lognormal",
+) -> MetadataTable:
+    """Synthetic HPC-filesystem snapshot with realistic skew:
+
+    - file sizes ~ lognormal (heavy tail; a few PB-scale outliers)
+    - per-user file counts ~ zipf (the paper's per-user aggregation skew)
+    - directory tree with geometric depth (mean ~3.6, like the Filebench
+      workload in §V-B3)
+    """
+    rng = np.random.default_rng(seed)
+
+    # directory tree
+    dir_parent = np.full(n_dirs, -1, np.int64)
+    dir_depth = np.zeros(n_dirs, np.int32)
+    dir_paths = np.empty(n_dirs, object)
+    dir_paths[0] = "/fs"
+    for i in range(1, n_dirs):
+        p = int(rng.integers(0, i))
+        if dir_depth[p] >= max_depth:
+            p = 0
+        dir_parent[i] = p
+        dir_depth[i] = dir_depth[p] + 1
+        dir_paths[i] = f"{dir_paths[p]}/d{i}"
+
+    # files
+    fdir = rng.integers(0, n_dirs, n_files)
+    zipf_u = rng.zipf(1.6, n_files) % n_users
+    uid = zipf_u.astype(np.int32)
+    gid = (uid % n_groups).astype(np.int32)
+    if size_dist == "lognormal":
+        size = rng.lognormal(mean=9.0, sigma=2.5, size=n_files)
+    else:
+        size = rng.gamma(1.5, 16e3 / 1.5, size=n_files)
+    mtime = now - rng.exponential(180 * 86400, n_files)
+    atime = mtime + rng.exponential(30 * 86400, n_files)
+    ctime = mtime - rng.uniform(0, 86400, n_files)
+    is_link = rng.random(n_files) < 0.02
+    mode = np.where(rng.random(n_files) < 0.01, 0o777,
+                    rng.choice([0o644, 0o640, 0o600, 0o755], n_files))
+
+    paths = np.empty(n_files + n_dirs, object)
+    paths[:n_dirs] = dir_paths
+    for i in range(n_files):
+        paths[n_dirs + i] = f"{dir_paths[fdir[i]]}/f{i}"
+
+    table = MetadataTable(
+        paths=paths,
+        path_hash=np.array([path_hash(p) for p in paths], np.uint32),
+        parent=np.concatenate([dir_parent, fdir.astype(np.int64)]),
+        depth=np.concatenate([dir_depth,
+                              dir_depth[fdir] + 1]).astype(np.int32),
+        type=np.concatenate([np.full(n_dirs, TYPE_DIR, np.int32),
+                             np.where(is_link, TYPE_LINK,
+                                      TYPE_FILE).astype(np.int32)]),
+        mode=np.concatenate([np.full(n_dirs, 0o755, np.int32),
+                             mode.astype(np.int32)]),
+        uid=np.concatenate([np.zeros(n_dirs, np.int32), uid]),
+        gid=np.concatenate([np.zeros(n_dirs, np.int32), gid]),
+        size=np.concatenate([np.zeros(n_dirs), size]),
+        atime=np.concatenate([np.full(n_dirs, now), atime]),
+        ctime=np.concatenate([np.full(n_dirs, now - 86400), ctime]),
+        mtime=np.concatenate([np.full(n_dirs, now - 86400), mtime]),
+        fileset=np.full(n_files + n_dirs, -1, np.int32),
+    )
+    return table
+
+
+def files_only(table: MetadataTable) -> MetadataTable:
+    """Paper §V-A2: FS-medium preprocessing filters out directory entries,
+    retaining only files and links."""
+    return table.select(table.type != TYPE_DIR)

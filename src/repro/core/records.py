@@ -1,0 +1,46 @@
+"""Globus-Search-style ingest records and the 10 MB / 5 s batcher
+(paper §IV-A1)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class IngestBatcher:
+    """Accumulates records; flushes at ~max_bytes or after timeout_s of
+    inactivity. The sink receives (records, request_id)."""
+
+    sink: Callable[[List[Dict], int], None]
+    max_bytes: int = 10 * 1024 * 1024
+    timeout_s: float = 5.0
+    audit: Optional[Callable[[int, int], None]] = None  # (request_id, n)
+
+    _buf: List[Dict] = dataclasses.field(default_factory=list)
+    _bytes: int = 0
+    _last: float = dataclasses.field(default_factory=time.monotonic)
+    _req: int = 0
+
+    def add(self, record: Dict) -> None:
+        self._buf.append(record)
+        self._bytes += len(json.dumps(record))
+        if self._bytes >= self.max_bytes:
+            self.flush()
+
+    def tick(self) -> None:
+        if self._buf and time.monotonic() - self._last > self.timeout_s:
+            self.flush()
+
+    def flush(self) -> Optional[int]:
+        if not self._buf:
+            return None
+        self._req += 1
+        self.sink(self._buf, self._req)
+        if self.audit:
+            self.audit(self._req, len(self._buf))
+        n = len(self._buf)
+        self._buf, self._bytes = [], 0
+        self._last = time.monotonic()
+        return self._req

@@ -1,0 +1,5 @@
+from repro.core.sketches import ddsketch  # noqa: F401  (device/jnp impl)
+from repro.core.sketches.ddsketch_host import DDSketch  # noqa: F401
+from repro.core.sketches.kll import KLLSketch  # noqa: F401
+from repro.core.sketches.reqsketch import ReqSketch  # noqa: F401
+from repro.core.sketches.tdigest import TDigest  # noqa: F401

@@ -1,0 +1,86 @@
+"""KLL sketch [Karnin, Lang, Liberty, FOCS'16] — optimal additive-rank-error
+quantile sketch. Mergeable host implementation (Apache DataSketches default
+k=200)."""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.sketches.base import SketchBase
+
+
+class KLLSketch(SketchBase):
+    name = "KLLSketch"
+
+    def __init__(self, k: int = 200, seed: int = 0):
+        self.k = k
+        self.rng = np.random.default_rng(seed)
+        self.compactors: List[List[float]] = [[]]
+        self.n = 0
+
+    # -- internals -----------------------------------------------------------
+    def _capacity(self, h: int) -> int:
+        height = len(self.compactors)
+        return max(2, int(np.ceil(self.k * (2.0 / 3.0) ** (height - 1 - h))))
+
+    def _grow(self) -> None:
+        self.compactors.append([])
+
+    def _compact(self) -> None:
+        for h in range(len(self.compactors)):
+            if len(self.compactors[h]) > self._capacity(h):
+                if h + 1 >= len(self.compactors):
+                    self._grow()
+                buf = sorted(self.compactors[h])
+                off = int(self.rng.integers(0, 2))
+                self.compactors[h + 1].extend(buf[off::2])
+                self.compactors[h] = []
+                break
+
+    # -- API -----------------------------------------------------------------
+    def update(self, values) -> None:
+        for v in np.asarray(values, np.float64).ravel():
+            self.compactors[0].append(float(v))
+            self.n += 1
+            while len(self.compactors[0]) > self._capacity(0):
+                self._compact()
+        # settle any over-capacity levels
+        for _ in range(64):
+            if all(len(c) <= self._capacity(h)
+                   for h, c in enumerate(self.compactors)):
+                break
+            self._compact()
+
+    def merge(self, other: "KLLSketch") -> None:
+        while len(self.compactors) < len(other.compactors):
+            self._grow()
+        for h, comp in enumerate(other.compactors):
+            self.compactors[h].extend(comp)
+        self.n += other.n
+        for _ in range(64):
+            if all(len(c) <= self._capacity(h)
+                   for h, c in enumerate(self.compactors)):
+                break
+            self._compact()
+
+    def _weighted(self):
+        items, weights = [], []
+        for h, comp in enumerate(self.compactors):
+            items.extend(comp)
+            weights.extend([2 ** h] * len(comp))
+        if not items:
+            return np.array([]), np.array([])
+        items = np.asarray(items)
+        weights = np.asarray(weights, np.float64)
+        order = np.argsort(items, kind="stable")
+        return items[order], weights[order]
+
+    def quantile(self, q: float) -> float:
+        items, weights = self._weighted()
+        if items.size == 0:
+            return float("nan")
+        cum = np.cumsum(weights)
+        target = q * cum[-1]
+        idx = int(np.searchsorted(cum, target, side="left"))
+        return float(items[min(idx, items.size - 1)])

@@ -1,0 +1,96 @@
+"""ReqSketch [Cormode, Karnin, Liberty, Thaler, Veselý, J.ACM'23] —
+relative-error streaming quantiles.
+
+Host implementation of the compactor scheme in its high-rank-accuracy
+(HRA) form: each compactor protects its largest items and only compacts a
+prefix of the sorted buffer, which concentrates accuracy near the maximum
+(the paper's Table VII observes exactly this trade-off: excellent rank
+accuracy, large relative value error near the median on heavy-tailed
+data)."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.sketches.base import SketchBase
+
+
+class ReqSketch(SketchBase):
+    name = "ReqSketch"
+
+    def __init__(self, k: int = 12, seed: int = 0):
+        # k = section size (DataSketches default 12); capacity grows with
+        # the number of sections per level.
+        self.k = k
+        self.rng = np.random.default_rng(seed)
+        self.compactors: List[List[float]] = [[]]
+        self.sections: List[int] = [3]
+        self.n = 0
+
+    def _capacity(self, h: int) -> int:
+        return 2 * self.k * self.sections[h]
+
+    def _grow(self) -> None:
+        self.compactors.append([])
+        self.sections.append(3)
+
+    def _compact(self, h: int) -> None:
+        if h + 1 >= len(self.compactors):
+            self._grow()
+        buf = sorted(self.compactors[h])
+        # protect the top `k * sections` items (HRA): compact only the prefix
+        protected = self.k * self.sections[h]
+        cut = max(0, len(buf) - protected)
+        cut -= cut % 2
+        prefix, keep = buf[:cut], buf[cut:]
+        off = int(self.rng.integers(0, 2))
+        self.compactors[h + 1].extend(prefix[off::2])
+        self.compactors[h] = keep
+        # shrink sections over time (raises compaction aggressiveness)
+        if self.sections[h] > 1 and self.rng.integers(0, 4) == 0:
+            self.sections[h] -= 1
+
+    def _settle(self) -> None:
+        for _ in range(64):
+            over = [h for h, c in enumerate(self.compactors)
+                    if len(c) > self._capacity(h)]
+            if not over:
+                break
+            self._compact(over[0])
+
+    def update(self, values) -> None:
+        for v in np.asarray(values, np.float64).ravel():
+            self.compactors[0].append(float(v))
+            self.n += 1
+            if len(self.compactors[0]) > self._capacity(0):
+                self._settle()
+
+    def merge(self, other: "ReqSketch") -> None:
+        while len(self.compactors) < len(other.compactors):
+            self._grow()
+        for h, comp in enumerate(other.compactors):
+            self.compactors[h].extend(comp)
+        self.n += other.n
+        self._settle()
+
+    def _weighted(self):
+        items, weights = [], []
+        for h, comp in enumerate(self.compactors):
+            items.extend(comp)
+            weights.extend([2 ** h] * len(comp))
+        if not items:
+            return np.array([]), np.array([])
+        items = np.asarray(items)
+        weights = np.asarray(weights, np.float64)
+        order = np.argsort(items, kind="stable")
+        return items[order], weights[order]
+
+    def quantile(self, q: float) -> float:
+        items, weights = self._weighted()
+        if items.size == 0:
+            return float("nan")
+        cum = np.cumsum(weights)
+        target = q * cum[-1]
+        idx = int(np.searchsorted(cum, target, side="left"))
+        return float(items[min(idx, items.size - 1)])

@@ -1,0 +1,87 @@
+"""t-Digest [Dunning, 2021] — merging-digest variant with the k1 scale
+function (delta=100, the reference default)."""
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.sketches.base import SketchBase
+
+
+def _k1(q: float, delta: float) -> float:
+    q = min(max(q, 1e-12), 1 - 1e-12)
+    return delta / (2.0 * math.pi) * math.asin(2.0 * q - 1.0)
+
+
+class TDigest(SketchBase):
+    name = "t-Digest"
+
+    def __init__(self, delta: float = 100.0):
+        self.delta = delta
+        self.means = np.array([], np.float64)
+        self.weights = np.array([], np.float64)
+        self.buffer: List[float] = []
+        self.n = 0
+
+    def _flush(self) -> None:
+        if not self.buffer and self.means.size == 0:
+            return
+        if self.buffer:
+            bm = np.asarray(self.buffer, np.float64)
+            bw = np.ones_like(bm)
+            means = np.concatenate([self.means, bm])
+            weights = np.concatenate([self.weights, bw])
+            self.buffer = []
+        else:
+            means, weights = self.means, self.weights
+        order = np.argsort(means, kind="stable")
+        means, weights = means[order], weights[order]
+        total = weights.sum()
+        new_m: List[float] = []
+        new_w: List[float] = []
+        cur_m, cur_w = means[0], weights[0]
+        w_so_far = 0.0
+        k_lo = _k1(0.0, self.delta)
+        for m, w in zip(means[1:], weights[1:]):
+            q_hi = (w_so_far + cur_w + w) / total
+            if _k1(q_hi, self.delta) - k_lo <= 1.0:
+                cur_m = (cur_m * cur_w + m * w) / (cur_w + w)
+                cur_w += w
+            else:
+                new_m.append(cur_m)
+                new_w.append(cur_w)
+                w_so_far += cur_w
+                k_lo = _k1(w_so_far / total, self.delta)
+                cur_m, cur_w = m, w
+        new_m.append(cur_m)
+        new_w.append(cur_w)
+        self.means = np.asarray(new_m)
+        self.weights = np.asarray(new_w)
+
+    def update(self, values) -> None:
+        vals = np.asarray(values, np.float64).ravel()
+        self.n += vals.size
+        for chunk in np.array_split(vals, max(1, vals.size // 5000)):
+            self.buffer.extend(chunk.tolist())
+            if len(self.buffer) >= 10 * int(self.delta):
+                self._flush()
+
+    def merge(self, other: "TDigest") -> None:
+        self._flush()
+        other._flush()
+        self.means = np.concatenate([self.means, other.means])
+        self.weights = np.concatenate([self.weights, other.weights])
+        self.n += other.n
+        self._flush()
+
+    def quantile(self, q: float) -> float:
+        self._flush()
+        if self.means.size == 0:
+            return float("nan")
+        if self.means.size == 1:
+            return float(self.means[0])
+        cum = np.cumsum(self.weights) - self.weights / 2.0
+        target = q * self.weights.sum()
+        return float(np.interp(target, cum, self.means))

@@ -1,0 +1,123 @@
+"""Data pipeline: deterministic sharded token source with hedged
+(straggler-mitigating) reads and Icicle instrumentation.
+
+At 1000+ nodes the data plane's tail latency is set by the slowest shard
+read; the standard mitigation is hedged requests — issue a backup read
+when the primary exceeds a latency percentile, first-completion wins,
+idempotent by shard id (the same dedup-by-design the paper's ingest uses).
+Here readers are simulated with a configurable latency distribution so the
+hedging logic is real and testable; on a cluster the reader callable is a
+GCS/Lustre fetch.
+
+Every shard read emits OPEN/CLOSE events into an Icicle EventStream —
+the training cluster's own storage traffic is monitored by the paper's
+system (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from typing import Callable, Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.core import events as ev
+
+
+@dataclasses.dataclass
+class DataConfig:
+    vocab_size: int = 50304
+    seq_len: int = 1024
+    global_batch: int = 8
+    shard_size: int = 1 << 16        # tokens per shard
+    seed: int = 0
+    hedge_after_s: float = 0.05      # backup request threshold
+    reader_latency_s: float = 0.0    # simulated median read latency
+    straggler_prob: float = 0.0      # P(read takes 20x median)
+
+
+class TokenShardSource:
+    """Deterministic synthetic corpus: shard i is PRNG(seed, i) tokens.
+    Idempotent reads: the same shard id always yields identical data."""
+
+    def __init__(self, cfg: DataConfig, stream: Optional[ev.EventStream] = None):
+        self.cfg = cfg
+        self.stream = stream
+        self._rng_global = np.random.default_rng(cfg.seed + 999)
+
+    def read_shard(self, shard_id: int) -> np.ndarray:
+        cfg = self.cfg
+        if cfg.reader_latency_s:
+            lat = cfg.reader_latency_s
+            if self._rng_global.random() < cfg.straggler_prob:
+                lat *= 20.0
+            time.sleep(lat)
+        if self.stream is not None:
+            fid = shard_id + 1
+            self.stream.emit(ev.E_OPEN, fid, 0)
+            self.stream.emit(ev.E_CLOSE, fid, 0, has_stat=1,
+                             size=float(cfg.shard_size * 4))
+        rng = np.random.default_rng((self.cfg.seed, shard_id))
+        return rng.integers(0, cfg.vocab_size, cfg.shard_size,
+                            dtype=np.int32)
+
+
+class HedgedReader:
+    """First-completion-wins hedged shard reads."""
+
+    def __init__(self, source: TokenShardSource, max_workers: int = 4):
+        self.source = source
+        self.pool = ThreadPoolExecutor(max_workers=max_workers)
+        self.metrics = {"reads": 0, "hedged": 0, "wasted": 0}
+
+    def read(self, shard_id: int) -> np.ndarray:
+        self.metrics["reads"] += 1
+        primary = self.pool.submit(self.source.read_shard, shard_id)
+        done, _ = wait([primary],
+                       timeout=self.source.cfg.hedge_after_s)
+        if done:
+            return primary.result()
+        self.metrics["hedged"] += 1
+        backup = self.pool.submit(self.source.read_shard, shard_id)
+        done, pending = wait([primary, backup], return_when=FIRST_COMPLETED)
+        winner = next(iter(done))
+        for p in pending:
+            p.cancel()
+            self.metrics["wasted"] += 1
+        return winner.result()
+
+
+class BatchIterator:
+    """(tokens, labels, positions) batches; shard order deterministic in
+    (epoch, step) so restart-from-checkpoint replays identically."""
+
+    def __init__(self, cfg: DataConfig, reader: Optional[HedgedReader] = None,
+                 stream: Optional[ev.EventStream] = None):
+        self.cfg = cfg
+        self.reader = reader or HedgedReader(TokenShardSource(cfg, stream))
+        self.step = 0
+
+    def seek(self, step: int) -> None:
+        self.step = step
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        need = cfg.global_batch * (cfg.seq_len + 1)
+        n_shards = -(-need // cfg.shard_size)
+        base = self.step * n_shards
+        tokens = np.concatenate(
+            [self.reader.read(base + i) for i in range(n_shards)])[:need]
+        tokens = tokens.reshape(cfg.global_batch, cfg.seq_len + 1)
+        self.step += 1
+        pos = np.broadcast_to(np.arange(cfg.seq_len),
+                              (cfg.global_batch, cfg.seq_len))
+        return {
+            "tokens": tokens[:, :-1].astype(np.int32),
+            "labels": tokens[:, 1:].astype(np.int32),
+            "positions": pos.astype(np.int32).copy(),
+        }
+
+    def __iter__(self):
+        return self

@@ -1,0 +1,153 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+Used by the dry-run (lower/compile without allocation) and by smoke tests
+(which materialize small versions). For stub-frontend archs (vlm/audio)
+``embeds`` carries precomputed patch/frame embeddings.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    out: Dict = {"labels": sd((b, s), jnp.int32)}
+    if cfg.embeds_input:
+        out["embeds"] = sd((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.family == "audio":
+            out["tokens"] = sd((b, s), jnp.int32)
+    else:
+        out["tokens"] = sd((b, s), jnp.int32)
+    if cfg.mrope_input:
+        out["positions"] = sd((3, b, s), jnp.int32)
+    else:
+        out["positions"] = sd((b, s), jnp.int32)
+    return out
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Dict, Dict]:
+    """Returns (batch_specs, cache_specs) for one decode step with a
+    seq_len-deep cache."""
+    b, s = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    batch: Dict = {}
+    if cfg.embeds_input and cfg.family != "audio":
+        batch["embeds"] = sd((b, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+    else:
+        batch["tokens"] = sd((b, 1), jnp.int32)
+    if cfg.mrope_input:
+        batch["positions"] = sd((3, b, 1), jnp.int32)
+    else:
+        batch["positions"] = sd((b, 1), jnp.int32)
+    cache = jax.eval_shape(lambda: models.init_cache(cfg, b, s))
+    return batch, cache
+
+
+def materialize_train_batch(cfg: ModelConfig, shape: ShapeConfig,
+                            seed: int = 0) -> Dict:
+    """Small concrete batch for smoke tests / examples."""
+    rng = np.random.default_rng(seed)
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict = {
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+    }
+    if cfg.embeds_input:
+        out["embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (b, s, cfg.d_model)), jnp.dtype(cfg.dtype))
+        if cfg.family == "audio":
+            out["tokens"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    else:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    pos = np.broadcast_to(np.arange(s), (b, s))
+    if cfg.mrope_input:
+        out["positions"] = jnp.asarray(
+            np.broadcast_to(pos, (3, b, s)).copy(), jnp.int32)
+    else:
+        out["positions"] = jnp.asarray(pos.copy(), jnp.int32)
+    return out
+
+
+def materialize_decode_batch(cfg: ModelConfig, batch_size: int,
+                             pos: int = 0, seed: int = 0) -> Dict:
+    rng = np.random.default_rng(seed)
+    out: Dict = {}
+    if cfg.embeds_input and cfg.family != "audio":
+        out["embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (batch_size, 1, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+    else:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch_size, 1)), jnp.int32)
+    p = np.full((batch_size, 1), pos)
+    if cfg.mrope_input:
+        out["positions"] = jnp.asarray(np.broadcast_to(p, (3, batch_size, 1)).copy(), jnp.int32)
+    else:
+        out["positions"] = jnp.asarray(p, jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Reduced configs for smoke tests: same family/flavour, tiny dims.
+# ---------------------------------------------------------------------------
+
+def reduced_config(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+    kw = dict(
+        num_layers=min(cfg.num_layers, 2),
+        d_model=128,
+        vocab_size=256,
+        attn_chunk_q=64,
+        attn_chunk_kv=64,
+        loss_chunk=64,
+        scan_layers=True,
+        zero1=False,
+        fsdp=False,
+        microbatches=1,
+    )
+    if cfg.num_heads:
+        kw["num_heads"] = 4
+        kw["num_kv_heads"] = max(1, min(cfg.num_kv_heads, 2))
+        kw["head_dim"] = 32
+        kw["d_ff"] = 256
+    if cfg.rope == "mrope":
+        kw["mrope_sections"] = (4, 6, 6)  # sums to head_dim/2 = 16
+    if cfg.moe is not None:
+        kw["num_layers"] = 3 if cfg.moe.dense_layers else 2
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=8, top_k=2, d_ff_expert=64,
+            dense_layer_d_ff=256 if cfg.moe.dense_layers else 0)
+        kw["d_ff"] = 64
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(
+            cfg.ssm, d_state=16, head_dim=16, chunk_size=32)
+    if cfg.hybrid is not None:
+        kw["num_layers"] = 5  # one full pattern group + 2 remainder
+        kw["num_heads"] = 4
+        kw["num_kv_heads"] = 1
+        kw["head_dim"] = 32
+        kw["d_ff"] = 256
+        kw["hybrid"] = dataclasses.replace(
+            cfg.hybrid, lru_width=128, window=32)
+    if cfg.encdec is not None:
+        kw["encdec"] = dataclasses.replace(
+            cfg.encdec, encoder_layers=2, max_source_positions=128)
+    return cfg.replace(**kw)
+
+
+def reduced_shape(kind: str = "train") -> "ShapeConfig":
+    from repro.configs.base import ShapeConfig
+    if kind == "train":
+        return ShapeConfig("smoke_train", 128, 4, "train")
+    if kind == "prefill":
+        return ShapeConfig("smoke_prefill", 128, 2, "prefill")
+    return ShapeConfig("smoke_decode", 128, 2, "decode")

@@ -1,0 +1,176 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Every parameter carries logical axis names from its PD descriptor; the
+rules below translate them to mesh axes. An axis is only sharded when the
+dimension divides the mesh-axis size — otherwise it is replicated (this is
+why e.g. qwen2's 12 attention heads replicate over a 16-way model axis; the
+roofline table shows the imbalance honestly).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import PD, is_pd
+
+# logical axis -> candidate mesh axis (model/tensor parallel dimension)
+_MODEL_AXES = {
+    "vocab": "model",
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "lru": "model",
+    "lru_heads": "model",
+    "experts": None,       # resolved per-config (ep vs tp)
+    "experts_r": None,     # router output dim: small, replicate
+    "expert_mlp": None,    # resolved per-config
+}
+
+
+def rules_for(cfg: ModelConfig) -> Dict[str, Optional[str]]:
+    rules = dict(_MODEL_AXES)
+    if cfg.moe is not None:
+        if cfg.moe.sharding == "ep":
+            rules["experts"] = "model"
+            rules["expert_mlp"] = None
+        else:
+            rules["experts"] = None
+            rules["expert_mlp"] = "model"
+    return rules
+
+
+def spec_for(pd: PD, cfg: ModelConfig, mesh: Mesh) -> P:
+    """Head-parallel when heads divide the model axis; otherwise fall back
+    to ROW-PARALLEL (shard the embed dim). Replicating an attention
+    projection because 56 (or 12, or 10) heads don't divide 16 costs 16x
+    the memory for the same compute — attention intermediates duplicate
+    across the model axis either way (§Perf iteration 9)."""
+    rules = rules_for(cfg)
+    axes = []
+    wanted_model = False
+    for dim, name in zip(pd.shape, pd.axes):
+        mesh_axis = rules.get(name) if name else None
+        if mesh_axis is not None and mesh_axis in mesh.axis_names:
+            if dim % mesh.shape[mesh_axis] == 0:
+                axes.append(mesh_axis)
+                continue
+            # fallback only for head-type axes (a non-divisible vocab must
+            # stay replicated: feature-sharding an embedding table breaks
+            # the gather/one-hot lowering)
+            if mesh_axis == "model" and name in ("heads", "kv_heads",
+                                                 "lru_heads"):
+                wanted_model = True
+        axes.append(None)
+    if wanted_model and "model" not in axes and "model" in mesh.axis_names:
+        n = mesh.shape["model"]
+        for i, (dim, name) in enumerate(zip(pd.shape, pd.axes)):
+            # only when the saving is material (small-d models replicate
+            # cheaply, and feature-sharding tiny dims trips XLA:CPU SPMD)
+            if name == "embed" and axes[i] is None and dim % n == 0 \
+                    and dim >= 1024:
+                axes[i] = "model"
+                break
+    return P(*axes)
+
+
+def param_specs(desc: Dict, cfg: ModelConfig, mesh: Mesh) -> Dict:
+    def one(pd: PD) -> P:
+        base = spec_for(pd, cfg, mesh)
+        if cfg.fsdp:
+            # ZeRO-3: additionally shard the largest free dim over "data";
+            # XLA inserts the per-layer all-gather (FSDP semantics).
+            base = zero1_spec(pd.shape, base, mesh)
+        return base
+    return jax.tree.map(one, desc, is_leaf=is_pd)
+
+
+def param_shardings(desc: Dict, cfg: ModelConfig, mesh: Mesh) -> Dict:
+    specs = param_specs(desc, cfg, mesh)  # fsdp-aware
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1, leading: int = 0) -> P:
+    """Spec for (B, ...) batch arrays: batch over DP axes, rest replicated."""
+    return P(*([None] * leading), dp_axes(mesh), *([None] * extra_dims))
+
+
+def zero1_spec(pd_shape: Tuple[int, ...], base: P, mesh: Mesh) -> P:
+    """Extend a param spec with DP-axis sharding on the largest free dim
+    (ZeRO-1/3 state sharding). On the multi-pod mesh the shard extends over
+    ("pod","data") — 32-way — so per-chip param/optimizer state halves when
+    a job scales out."""
+    flat = []
+    for entry in tuple(base):
+        if isinstance(entry, (tuple, list)):
+            flat.extend(entry)
+        elif entry is not None:
+            flat.append(entry)
+    if "data" in flat:
+        return base
+    dp = dp_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape.get(a, 1)
+    axes = list(base) + [None] * (len(pd_shape) - len(base))
+    best, best_dim = -1, -1
+    for i, (dim, ax) in enumerate(zip(pd_shape, axes)):
+        if ax is None and dim % n_dp == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    if best >= 0:
+        axes[best] = dp if len(dp) > 1 else dp[0]
+    return P(*axes)
+
+
+def cache_specs(cfg: ModelConfig, cache: Dict, mesh: Mesh) -> Dict:
+    """Shardings for decode caches.
+
+    KV caches shard batch over DP axes and the *sequence* dim over "model"
+    (flash-decoding style sequence parallelism) because most assigned archs
+    have kv_heads that do not divide the model axis. SSM/LRU states shard
+    heads/width over "model".
+    """
+    dp = dp_axes(mesh)
+    n_model = mesh.shape["model"]
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+
+    def spec(path: str, x) -> P:
+        shape = x.shape
+        if path == "pos":
+            return P()
+        b_ok = len(shape) > 1 and shape[1] % n_dp == 0
+        if path in ("k", "v", "cross_k", "cross_v"):
+            # (L, B, S, Hkv, hd)
+            s_ok = shape[2] % n_model == 0
+            return P(None, dp if b_ok else None, "model" if s_ok else None,
+                     None, None)
+        if path in ("g_k", "g_v"):
+            # (G, B, W, Hkv, hd) — window cache: batch-only sharding
+            return P(None, dp if b_ok else None, None, None, None)
+        if path == "ssd":
+            # (L, B, H, P, N)
+            h_ok = shape[2] % n_model == 0
+            return P(None, dp if b_ok else None, "model" if h_ok else None,
+                     None, None)
+        if path == "conv":
+            # (L, B, K-1, C)
+            c_ok = shape[3] % n_model == 0
+            return P(None, dp if b_ok else None, None,
+                     "model" if c_ok else None)
+        if path in ("g_conv", "t_conv", "g_lru", "t_lru"):
+            # (..., B, [K-1,] C/W): shard the trailing channel dim over model
+            c_ok = shape[-1] % n_model == 0
+            return P(*([None] * (len(shape) - 1)), "model" if c_ok else None)
+        return P()
+
+    return {k: NamedSharding(mesh, spec(k, v)) for k, v in cache.items()}

@@ -1,0 +1,32 @@
+"""jit'd public wrapper for the grouped-DDSketch Pallas kernel, signature-
+compatible with sketches.ddsketch.update_grouped."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketches import ddsketch as dds
+from repro.core.sketches.ddsketch import DDSketchConfig
+from repro.kernels.ddsketch.ddsketch import grouped_update_pallas
+
+# interpret=True on CPU (this container); on TPU set REPRO_PALLAS_COMPILE=1.
+import os
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def _delta(cfg: DDSketchConfig, values, pids, mask, n_principals):
+    return grouped_update_pallas(cfg, values, pids, mask, n_principals,
+                                 interpret=INTERPRET)
+
+
+def update_grouped(cfg: DDSketchConfig, state: Dict, values: jax.Array,
+                   pids: jax.Array, n_principals: int,
+                   mask: Optional[jax.Array] = None) -> Dict:
+    if mask is None:
+        mask = jnp.ones_like(values, jnp.float32)
+    delta = _delta(cfg, values, pids, mask, n_principals)
+    return dds.merge(state, delta)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the grouped DDSketch kernel: defers to the
+production sketch implementation in core/sketches."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketches import ddsketch as dds
+from repro.core.sketches.ddsketch import DDSketchConfig
+
+
+def grouped_update_ref(cfg: DDSketchConfig, values: jax.Array,
+                       pids: jax.Array, mask: jax.Array,
+                       n_principals: int) -> Dict[str, jax.Array]:
+    state = dds.init(cfg, (n_principals,))
+    return dds.update_grouped(cfg, state, values, pids, n_principals, mask)

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: FNV-1a hashing of fixed-width byte rows -> shard ids.
+
+The paper's ingestion layer shards work by ``zlib.crc32(row) % 64``; the
+TPU analogue hashes fixed-width path-byte rows (padded/truncated to W
+bytes) entirely on the VPU with uint32 wraparound arithmetic — W is a
+static unroll, so a (ROWS, W) tile costs W fused multiply-xor passes over
+a VMEM-resident tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+FNV_OFFSET = 0x811C9DC5
+FNV_PRIME = 0x01000193
+
+
+def _kernel(bytes_ref, len_ref, hash_ref, shard_ref, *, n_shards: int):
+    b = bytes_ref[...].astype(jnp.uint32)          # (ROWS, W)
+    ln = len_ref[...]                              # (ROWS,) int32 valid length
+    rows, w = b.shape
+    h = jnp.full((rows,), FNV_OFFSET, jnp.uint32)
+    prime = jnp.uint32(FNV_PRIME)
+    col = jax.lax.broadcasted_iota(jnp.int32, (rows, w), 1)
+    valid = col < ln[:, None]
+    for i in range(w):                             # static unroll over width
+        byte = jnp.where(valid[:, i], b[:, i], jnp.uint32(0))
+        h_new = (h ^ byte) * prime
+        h = jnp.where(valid[:, i], h_new, h)
+    hash_ref[...] = h
+    shard_ref[...] = (h % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
+def hashshard_pallas(byte_rows: jax.Array, lengths: jax.Array,
+                     n_shards: int = 64, *, rows: int = 256,
+                     interpret: bool = True):
+    """byte_rows: (N, W) uint8; lengths: (N,) int32. Returns (hash u32,
+    shard id int32)."""
+    n, w = byte_rows.shape
+    n_pad = -(-n // rows) * rows
+    if n_pad != n:
+        byte_rows = jnp.pad(byte_rows, ((0, n_pad - n), (0, 0)))
+        lengths = jnp.pad(lengths, (0, n_pad - n))
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_shards=n_shards),
+        grid=(n_pad // rows,),
+        in_specs=[pl.BlockSpec((rows, w), lambda i: (i, 0)),
+                  pl.BlockSpec((rows,), lambda i: (i,))],
+        out_specs=(pl.BlockSpec((rows,), lambda i: (i,)),
+                   pl.BlockSpec((rows,), lambda i: (i,))),
+        out_shape=(jax.ShapeDtypeStruct((n_pad,), jnp.uint32),
+                   jax.ShapeDtypeStruct((n_pad,), jnp.int32)),
+        interpret=interpret,
+    )(byte_rows, lengths.astype(jnp.int32))
+    return out[0][:n], out[1][:n]

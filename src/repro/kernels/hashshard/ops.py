@@ -1,0 +1,18 @@
+"""jit'd wrapper for the hashshard kernel."""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hashshard.hashshard import hashshard_pallas
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def hashshard(byte_rows: jax.Array, lengths: jax.Array, n_shards: int = 64):
+    return hashshard_pallas(byte_rows, lengths, n_shards,
+                            interpret=INTERPRET)

@@ -1,0 +1,46 @@
+"""jnp + host oracles for the hashshard kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FNV_OFFSET = np.uint32(0x811C9DC5)
+FNV_PRIME = np.uint32(0x01000193)
+
+
+def hashshard_ref(byte_rows: jax.Array, lengths: jax.Array,
+                  n_shards: int = 64):
+    b = byte_rows.astype(jnp.uint32)
+    n, w = b.shape
+    h = jnp.full((n,), jnp.uint32(0x811C9DC5))
+    col = jnp.arange(w)
+    valid = col[None, :] < lengths[:, None]
+    for i in range(w):
+        h_new = (h ^ jnp.where(valid[:, i], b[:, i], 0)) * jnp.uint32(0x01000193)
+        h = jnp.where(valid[:, i], h_new, h)
+    return h, (h % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
+def hashshard_host(strings, n_shards: int = 64):
+    """Host oracle — identical to metadata.path_hash."""
+    out_h, out_s = [], []
+    for s in strings:
+        h = np.uint32(FNV_OFFSET)
+        for byte in s.encode("utf-8"):
+            h = np.uint32((int(h) ^ byte) * int(FNV_PRIME) & 0xFFFFFFFF)
+        out_h.append(h)
+        out_s.append(int(h) % n_shards)
+    return np.array(out_h, np.uint32), np.array(out_s, np.int32)
+
+
+def encode_strings(strings, width: int = 128):
+    """Strings -> (N, W) uint8 + lengths (host-side packing)."""
+    n = len(strings)
+    rows = np.zeros((n, width), np.uint8)
+    lens = np.zeros(n, np.int32)
+    for i, s in enumerate(strings):
+        raw = s.encode("utf-8")[:width]
+        rows[i, :len(raw)] = np.frombuffer(raw, np.uint8)
+        lens[i] = len(raw)
+    return rows, lens

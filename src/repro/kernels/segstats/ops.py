@@ -1,0 +1,17 @@
+"""jit'd wrapper for segstats."""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels.segstats.segstats import segstats_pallas
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5))
+def segstats(pids, sids, values, mask, n_principals, n_shards=64):
+    return segstats_pallas(pids, sids, values, mask, n_principals, n_shards,
+                           interpret=INTERPRET)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for segstats."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segstats_ref(pids, sids, values, mask, n_principals, n_shards=64):
+    m = mask.astype(jnp.float32)
+    v = values.astype(jnp.float32)
+    counts = jnp.zeros((n_principals, n_shards), jnp.float32)
+    counts = counts.at[pids, sids].add(m)
+    s = jnp.zeros(n_principals, jnp.float32).at[pids].add(v * m)
+    live_v = jnp.where(m > 0, v, jnp.inf)
+    mn = jnp.full(n_principals, jnp.inf).at[pids].min(live_v)
+    live_v2 = jnp.where(m > 0, v, -jnp.inf)
+    mx = jnp.full(n_principals, -jnp.inf).at[pids].max(live_v2)
+    return {"counts": counts, "sum": s, "min": mn, "max": mx}

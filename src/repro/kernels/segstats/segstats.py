@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: fused per-(principal, shard) counting — the counting
+pipeline's hot loop (paper §IV-A2).
+
+Computes counts[p, s] += 1 for every row, as a one-hot MXU contraction
+(principal one-hot ^T @ shard one-hot), plus fused per-principal
+sum/min/max of an attribute column (used for quick capacity reports
+without a full sketch pass).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_BIG = -3.0e38
+POS_BIG = 3.0e38
+
+
+def _kernel(pids_ref, sids_ref, vals_ref, mask_ref,
+            counts_ref, sum_ref, min_ref, max_ref, *, p_block: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        min_ref[...] = jnp.full_like(min_ref, POS_BIG)
+        max_ref[...] = jnp.full_like(max_ref, NEG_BIG)
+
+    pid = pids_ref[...]
+    sid = sids_ref[...]
+    v = vals_ref[...].astype(jnp.float32)
+    m = mask_ref[...].astype(jnp.float32)
+    n_shards = counts_ref.shape[1]
+
+    p0 = pl.program_id(0) * p_block
+    lp = pid - p0
+    sel = (lp >= 0) & (lp < p_block)
+    lpc = jnp.clip(lp, 0, p_block - 1)
+    onehot_p = ((lpc[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, p_block), 1)) & sel[:, None]).astype(jnp.float32)
+    onehot_p = onehot_p * m[:, None]
+    onehot_s = (sid[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, n_shards), 1)).astype(jnp.float32)
+
+    counts_ref[...] += jax.lax.dot_general(
+        onehot_p, onehot_s, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    sum_ref[...] += jnp.sum(onehot_p * v[:, None], axis=0)
+    live = onehot_p > 0
+    min_ref[...] = jnp.minimum(
+        min_ref[...], jnp.min(jnp.where(live, v[:, None], POS_BIG), axis=0))
+    max_ref[...] = jnp.maximum(
+        max_ref[...], jnp.max(jnp.where(live, v[:, None], NEG_BIG), axis=0))
+
+
+def segstats_pallas(pids: jax.Array, sids: jax.Array, values: jax.Array,
+                    mask: jax.Array, n_principals: int, n_shards: int = 64,
+                    *, rows: int = 512, p_block: int = 128,
+                    interpret: bool = True):
+    n = pids.shape[0]
+    n_pad = -(-n // rows) * rows
+    p_pad = -(-n_principals // p_block) * p_block
+    if n_pad != n:
+        pad = n_pad - n
+        pids = jnp.pad(pids, (0, pad))
+        sids = jnp.pad(sids, (0, pad))
+        values = jnp.pad(values, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+    grid = (p_pad // p_block, n_pad // rows)
+    vec = pl.BlockSpec((p_block,), lambda i, j: (i,))
+    counts, s, mn, mx = pl.pallas_call(
+        functools.partial(_kernel, p_block=p_block),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows,), lambda i, j: (j,))] * 4,
+        out_specs=(pl.BlockSpec((p_block, n_shards), lambda i, j: (i, 0)),
+                   vec, vec, vec),
+        out_shape=(jax.ShapeDtypeStruct((p_pad, n_shards), jnp.float32),
+                   jax.ShapeDtypeStruct((p_pad,), jnp.float32),
+                   jax.ShapeDtypeStruct((p_pad,), jnp.float32),
+                   jax.ShapeDtypeStruct((p_pad,), jnp.float32)),
+        interpret=interpret,
+    )(pids.astype(jnp.int32), sids.astype(jnp.int32),
+      values.astype(jnp.float32), mask.astype(jnp.float32))
+    sl = slice(0, n_principals)
+    return {"counts": counts[sl], "sum": s[sl],
+            "min": jnp.where(mn[sl] >= POS_BIG, jnp.inf, mn[sl]),
+            "max": jnp.where(mx[sl] <= NEG_BIG, -jnp.inf, mx[sl])}

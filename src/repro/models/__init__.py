@@ -1,0 +1,52 @@
+"""Unified model API over all assigned families."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as _tf
+from repro.models import whisper as _wh
+from repro.models.layers import abstract_params as _abstract
+from repro.models.layers import init_params as _init
+
+
+def param_desc(cfg: ModelConfig) -> Dict:
+    if cfg.family == "audio":
+        return _wh.param_desc(cfg)
+    return _tf.param_desc(cfg)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    return _init(param_desc(cfg), key, jnp.dtype(cfg.param_dtype))
+
+
+def abstract_params(cfg: ModelConfig) -> Dict:
+    return _abstract(param_desc(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict, mesh=None,
+            emit_cache: bool = False):
+    if cfg.family == "audio":
+        return _wh.forward(cfg, params, batch, mesh, emit_cache)
+    return _tf.forward(cfg, params, batch, mesh, emit_cache)
+
+
+def logits_fn(cfg: ModelConfig, params: Dict, x, mesh=None):
+    return _tf.logits_fn(cfg, params, x, mesh)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> Dict:
+    if cfg.family == "audio":
+        return _wh.init_cache(cfg, batch, max_len, enc_len or max_len)
+    return _tf.init_cache(cfg, batch, max_len)
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, batch: Dict,
+                mesh=None):
+    if cfg.family == "audio":
+        return _wh.decode_step(cfg, params, cache, batch, mesh)
+    return _tf.decode_step(cfg, params, cache, batch, mesh)

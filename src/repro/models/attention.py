@@ -1,0 +1,191 @@
+"""Attention: chunked (flash-style) GQA self-attention, banded local
+attention, and cache-based decode attention.
+
+All variants are pure ``jnp`` + ``lax.scan`` — memory-bounded by chunk
+sizes instead of materializing (S x S) score matrices, which is what lets
+the 32k-prefill cells compile within per-device HBM on the production mesh.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import PD, apply_rope, softcap
+
+NEG_INF = -1e30
+
+
+def attn_desc(cfg: ModelConfig) -> Dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.num_heads, cfg.num_kv_heads
+    desc = {
+        "wq": PD((d, nh, hd), ("embed", "heads", "head_dim")),
+        "wk": PD((d, nkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": PD((d, nkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": PD((nh, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        desc["bq"] = PD((nh, hd), ("heads", "head_dim"), "zeros")
+        desc["bk"] = PD((nkv, hd), ("kv_heads", "head_dim"), "zeros")
+        desc["bv"] = PD((nkv, hd), ("kv_heads", "head_dim"), "zeros")
+    return desc
+
+
+def qkv_proj(cfg: ModelConfig, p: Dict, x: jax.Array,
+             positions: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = apply_rope(cfg, q, positions)
+    k = apply_rope(cfg, k, positions)
+    return q, k, v
+
+
+def out_proj(p: Dict, o: jax.Array) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+
+
+def _expand_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B,S,Hkv,hd) -> (B,S,Hkv*groups,hd) by repeat (GQA)."""
+    if groups == 1:
+        return k
+    b, s, hkv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, groups, hd)).reshape(
+        b, s, hkv * groups, hd)
+
+
+def chunked_attention(
+    cfg: ModelConfig,
+    q: jax.Array,                      # (B, Sq, H, hd)
+    k: jax.Array,                      # (B, Skv, Hkv, hd)
+    v: jax.Array,                      # (B, Skv, Hkv, hd)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,                 # absolute position of q[0] in kv space
+) -> jax.Array:
+    """Online-softmax attention, scanned over kv chunks per q chunk."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    k = _expand_kv(k, h // k.shape[2])
+    v = _expand_kv(v, h // v.shape[2])
+    cq = min(cfg.attn_chunk_q, sq)
+    ckv = min(cfg.attn_chunk_kv, skv)
+    assert sq % cq == 0 and skv % ckv == 0, (sq, cq, skv, ckv)
+    nq, nkv = sq // cq, skv // ckv
+    scale = hd ** -0.5
+
+    qc = q.reshape(b, nq, cq, h, hd)
+    kc = k.reshape(b, nkv, ckv, h, hd)
+    vc = v.reshape(b, nkv, ckv, h, hd)
+    q_pos = q_offset + jnp.arange(sq).reshape(nq, cq)
+    kv_pos = jnp.arange(skv).reshape(nkv, ckv)
+
+    def q_chunk(qi: jax.Array, q_blk: jax.Array) -> jax.Array:
+        # q_blk: (B, cq, H, hd)
+        def kv_step(carry, inp):
+            acc, m, l = carry                     # (B,cq,H,hd),(B,H,cq),(B,H,cq)
+            k_blk, v_blk, kv_p = inp
+            s = jnp.einsum("bqhk,bvhk->bhqv", q_blk, k_blk).astype(jnp.float32)
+            s = s * scale
+            s = softcap(s, cfg.attn_logit_softcap)
+            if causal:
+                mask = q_pos[qi][None, None, :, None] >= kv_p[None, None, None, :]
+                s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqv,bvhk->bqhk", p.astype(q_blk.dtype), v_blk)
+            acc_new = acc * alpha.transpose(0, 2, 1)[..., None] + pv.astype(jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        init = (
+            jnp.zeros((b, cq, h, hd), jnp.float32),
+            jnp.full((b, h, cq), NEG_INF, jnp.float32),
+            jnp.zeros((b, h, cq), jnp.float32),
+        )
+        # Remat the inner step: without this, backward saves the (cq x ckv)
+        # probability block for every (q-chunk, kv-chunk) pair — the exact
+        # O(S^2) memory flash-attention exists to avoid.
+        (acc, m, l), _ = jax.lax.scan(
+            jax.checkpoint(kv_step),
+            init, (kc.swapaxes(0, 1), vc.swapaxes(0, 1), kv_pos))
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+        return out.astype(q.dtype)
+
+    outs = jax.lax.map(lambda i: q_chunk(i, qc[:, i]), jnp.arange(nq))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def local_attention(
+    cfg: ModelConfig,
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *,
+    window: int,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Banded causal attention: position i attends to (i-window, i].
+
+    Chunk size == window; each q chunk sees its own chunk plus the previous
+    one -> O(S * 2w) work, static shapes.
+    """
+    b, sq, h, hd = q.shape
+    k = _expand_kv(k, h // k.shape[2])
+    v = _expand_kv(v, h // v.shape[2])
+    w = min(window, sq)
+    if sq <= w:  # degenerate: plain causal attention
+        return chunked_attention(cfg, q, k, v, causal=True, q_offset=q_offset)
+    assert sq % w == 0, (sq, w)
+    n = sq // w
+    scale = hd ** -0.5
+
+    qc = q.reshape(b, n, w, h, hd)
+    kc = k.reshape(b, n, w, h, hd)
+    vc = v.reshape(b, n, w, h, hd)
+    # previous chunk (zeros for chunk 0 — masked out anyway)
+    k_prev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    kb = jnp.concatenate([k_prev, kc], axis=2)      # (B, n, 2w, H, hd)
+    vb = jnp.concatenate([v_prev, vc], axis=2)
+
+    s = jnp.einsum("bnqhk,bnvhk->bnhqv", qc, kb).astype(jnp.float32) * scale
+    s = softcap(s, cfg.attn_logit_softcap)
+    q_pos = jnp.arange(sq).reshape(n, w)                    # position in band
+    kv_pos = q_pos[:, None, :] + jnp.array([-w, 0])[:, None]  # (n,2,w)
+    kv_pos = kv_pos.reshape(n, 2 * w)
+    valid = (kv_pos[:, None, :] <= q_pos[:, :, None]) & (
+        kv_pos[:, None, :] > q_pos[:, :, None] - w) & (kv_pos[:, None, :] >= 0)
+    s = jnp.where(valid[None, :, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bnhqv,bnvhk->bnqhk", p, vb)
+    return o.reshape(b, sq, h, hd)
+
+
+def decode_attention(
+    cfg: ModelConfig,
+    q: jax.Array,                      # (B, 1, H, hd)
+    k_cache: jax.Array,                # (B, S, Hkv, hd)
+    v_cache: jax.Array,
+    cache_len: jax.Array,              # () int32 — number of valid positions
+) -> jax.Array:
+    """Single-token attention against a (ring-buffer) KV cache."""
+    b, s, hkv, hd = k_cache.shape
+    h = q.shape[2]
+    scale = hd ** -0.5
+    g = h // hkv
+    qg = q.reshape(b, 1, hkv, g, hd)
+    sc = jnp.einsum("bqhgk,bvhk->bhgqv", qg, k_cache).astype(jnp.float32) * scale
+    sc = softcap(sc, cfg.attn_logit_softcap)
+    mask = jnp.arange(s)[None, None, None, None, :] < cache_len
+    sc = jnp.where(mask, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgqv,bvhk->bqhgk", p.astype(q.dtype), v_cache)
+    return o.reshape(b, 1, h, hd)

@@ -1,0 +1,194 @@
+"""Shared model building blocks: parameter descriptors, norms, rotary
+embeddings, MLPs.
+
+Parameters are plain nested dicts of ``jnp`` arrays. Every parameter is
+declared once as a :class:`PD` (shape + *logical axis names* + initializer);
+``init_params`` / ``abstract_params`` / ``logical specs`` are all derived
+from the same descriptor tree, so the three can never diverge.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+class PD(NamedTuple):
+    """Parameter descriptor."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Any, ...]          # logical axis name (or None) per dim
+    init: str = "normal"           # normal | zeros | ones | ssm_a | ssm_dt
+
+    def stacked(self, n: int) -> "PD":
+        return PD((n,) + self.shape, ("layers",) + self.axes, self.init)
+
+
+def _init_leaf(key, pd: PD, dtype) -> jax.Array:
+    if pd.init == "zeros":
+        return jnp.zeros(pd.shape, dtype)
+    if pd.init == "ones":
+        return jnp.ones(pd.shape, dtype)
+    if pd.init == "ssm_a":
+        # A in [1, 16): log-parametrized negative decay rates.
+        u = jax.random.uniform(key, pd.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if pd.init == "ssm_dt":
+        # dt bias such that softplus(dt) spans [1e-3, 1e-1].
+        u = jax.random.uniform(key, pd.shape, jnp.float32)
+        dt = jnp.exp(u * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    fan_in = pd.shape[0] if len(pd.shape) >= 2 else max(pd.shape[-1], 1)
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, pd.shape, jnp.float32) * scale).astype(dtype)
+
+
+def is_pd(x) -> bool:
+    return isinstance(x, PD)
+
+
+def init_params(desc: Dict, key, dtype) -> Dict:
+    leaves, treedef = jax.tree.flatten(desc, is_leaf=is_pd)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_init_leaf(k, pd, dtype) for k, pd in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def abstract_params(desc: Dict, dtype) -> Dict:
+    return jax.tree.map(
+        lambda pd: jax.ShapeDtypeStruct(pd.shape, dtype), desc, is_leaf=is_pd
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_desc(cfg: ModelConfig, d: int) -> Dict:
+    if cfg.norm == "rmsnorm":
+        return {"scale": PD((d,), ("embed",), "ones")}
+    if cfg.norm == "layernorm":
+        return {"scale": PD((d,), ("embed",), "ones"),
+                "bias": PD((d,), ("embed",), "zeros")}
+    return {}  # nonparametric_ln
+
+
+def apply_norm(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        if cfg.norm == "layernorm":
+            out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (rope / rope2d / mrope)
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    # x: (..., d) pairs interleaved as [x1, x2] halves (llama convention).
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(cfg: ModelConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32, or (3, B, S) for mrope."""
+    hd = x.shape[-1]
+    if cfg.rope == "none" or cfg.rope == "learned_abs":
+        return x
+    if cfg.rope == "rope":
+        freqs = _rope_freqs(hd, cfg.rope_theta)                    # (hd/2,)
+        ang = positions[..., None].astype(jnp.float32) * freqs      # (B,S,hd/2)
+        cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+        return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+    if cfg.rope == "rope2d":
+        # ChatGLM: rotary on the first half of head_dim, identity on the rest.
+        rot, keep = x[..., : hd // 2], x[..., hd // 2:]
+        freqs = _rope_freqs(hd // 2, cfg.rope_theta)
+        ang = positions[..., None].astype(jnp.float32) * freqs
+        cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+        rot = _rotate(rot.astype(jnp.float32), cos, sin).astype(x.dtype)
+        return jnp.concatenate([rot, keep], axis=-1)
+    if cfg.rope == "mrope":
+        # positions: (3, B, S) — temporal / height / width id streams.
+        assert positions.ndim == 3, "mrope needs (3, B, S) position ids"
+        freqs = _rope_freqs(hd, cfg.rope_theta)                     # (hd/2,)
+        sec = cfg.mrope_sections
+        assert sum(sec) == hd // 2, (sec, hd)
+        # For frequency slot j, pick the position stream of its section.
+        stream = jnp.repeat(
+            jnp.arange(3), jnp.array(sec), total_repeat_length=hd // 2
+        )                                                           # (hd/2,)
+        pos = positions.astype(jnp.float32)                         # (3,B,S)
+        pos_per_freq = jnp.take(pos, stream, axis=0)                # (hd/2,B,S)
+        ang = jnp.moveaxis(pos_per_freq, 0, -1) * freqs              # (B,S,hd/2)
+        cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+        return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+    raise ValueError(cfg.rope)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-encoder style sinusoidal embeddings (n, d)."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = jnp.arange(n)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_desc(cfg: ModelConfig, d: int, f: int) -> Dict:
+    if cfg.gated_mlp:
+        return {
+            "wi": PD((d, 2, f), ("embed", None, "mlp")),   # fused gate+up
+            "wo": PD((f, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": PD((d, f), ("embed", "mlp")),
+        "wi_b": PD((f,), ("mlp",), "zeros"),
+        "wo": PD((f, d), ("mlp", "embed")),
+        "wo_b": PD((d,), ("embed",), "zeros"),
+    }
+
+
+def activation_fn(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.activation == "silu":
+        return jax.nn.silu(x)
+    if cfg.activation == "gelu":
+        return jax.nn.gelu(x, approximate=False)
+    return jax.nn.gelu(x, approximate=True)
+
+
+def apply_mlp(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    if cfg.gated_mlp:
+        h = jnp.einsum("...d,dgf->...gf", x, p["wi"].astype(x.dtype))
+        gate, up = h[..., 0, :], h[..., 1, :]
+        h = activation_fn(cfg, gate) * up
+        return jnp.einsum("...f,fd->...d", h, p["wo"].astype(x.dtype))
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(x.dtype)) + p["wi_b"].astype(x.dtype)
+    h = activation_fn(cfg, h)
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(x.dtype)) + p["wo_b"].astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0:
+        return jnp.tanh(x / cap) * cap
+    return x

@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+The recurrence  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)  is a
+per-channel affine map, so training/prefill uses ``lax.associative_scan``
+(log-depth on TPU); decode is a single fused step. Gates use the paper's
+block-diagonal per-head projections.
+
+Sharding: lru_width shards over "model"; the recurrence, conv and gates are
+all channel-local, so the only collective per block is the out-projection
+all-reduce (Megatron pattern).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import PD
+from repro.models.ssm import _causal_conv
+
+_C = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+def rglru_desc(cfg: ModelConfig) -> Dict:
+    h = cfg.hybrid
+    d = cfg.d_model
+    w = h.lru_width or d
+    nb = cfg.num_heads                      # gate blocks = attention heads
+    bw = w // nb
+    return {
+        "w_x": PD((d, w), ("embed", "lru")),
+        "w_y": PD((d, w), ("embed", "lru")),
+        "conv_w": PD((h.conv_width, w), (None, "lru")),
+        "conv_b": PD((w,), ("lru",), "zeros"),
+        "gate_a_w": PD((nb, bw, bw), ("lru_heads", None, None)),
+        "gate_a_b": PD((nb, bw), ("lru_heads", None), "zeros"),
+        "gate_x_w": PD((nb, bw, bw), ("lru_heads", None, None)),
+        "gate_x_b": PD((nb, bw), ("lru_heads", None), "zeros"),
+        "lambda_p": PD((w,), ("lru",), "ssm_a"),     # softplus-parametrized decay
+        "w_out": PD((w, d), ("lru", "embed")),
+    }
+
+
+def _gates(prm: Dict, xw: jax.Array, nb: int) -> Tuple[jax.Array, jax.Array]:
+    b, s, w = xw.shape
+    xb = xw.reshape(b, s, nb, w // nb)
+    r = jnp.einsum("bshi,hij->bshj", xb, prm["gate_a_w"].astype(xw.dtype))
+    r = jax.nn.sigmoid(r + prm["gate_a_b"].astype(xw.dtype))
+    i = jnp.einsum("bshi,hij->bshj", xb, prm["gate_x_w"].astype(xw.dtype))
+    i = jax.nn.sigmoid(i + prm["gate_x_b"].astype(xw.dtype))
+    return r.reshape(b, s, w), i.reshape(b, s, w)
+
+
+def apply_rglru(cfg: ModelConfig, prm: Dict, x: jax.Array,
+                state: Dict = None) -> Tuple[jax.Array, Dict]:
+    """Full Griffin recurrent block. x: (B,S,d)."""
+    hcfg = cfg.hybrid
+    w = hcfg.lru_width or cfg.d_model
+    nb = cfg.num_heads
+    b, s, d = x.shape
+    dt = x.dtype
+
+    y = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, prm["w_y"].astype(dt)))
+    xw = jnp.einsum("bsd,dw->bsw", x, prm["w_x"].astype(dt))
+
+    new_state = {}
+    if state is None:
+        xw = _causal_conv(xw, prm["conv_w"]) + prm["conv_b"].astype(dt)
+        h0 = jnp.zeros((b, w), jnp.float32)
+    else:
+        hist = state["conv"]
+        new_state["conv"] = jnp.concatenate([hist, xw], axis=1)[:, -(hcfg.conv_width - 1):]
+        xw = _causal_conv(xw, prm["conv_w"], hist) + prm["conv_b"].astype(dt)
+        h0 = state["lru"]
+
+    r, i = _gates(prm, xw, nb)
+    log_a_base = -_C * jax.nn.softplus(prm["lambda_p"].astype(jnp.float32))
+    log_a = log_a_base[None, None, :] * r.astype(jnp.float32)     # (B,S,w)
+    a = jnp.exp(log_a)
+    gated = (i * xw).astype(jnp.float32)
+    bterm = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    if state is None and s > 1:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        a_sc, b_sc = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+        h = a_sc * h0[:, None, :] + b_sc
+        h_final = h[:, -1]
+    else:
+        def step(hprev, inp):
+            at, bt = inp
+            hnew = at * hprev + bt
+            return hnew, hnew
+        h_final, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), bterm.swapaxes(0, 1)))
+        h = hs.swapaxes(0, 1)
+
+    if state is not None:
+        new_state["lru"] = h_final
+
+    out = (h.astype(dt) * y)
+    return jnp.einsum("bsw,wd->bsd", out, prm["w_out"].astype(dt)), new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    hcfg = cfg.hybrid
+    w = hcfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, hcfg.conv_width - 1, w), dtype),
+        "lru": jnp.zeros((batch, w), jnp.float32),
+    }

@@ -1,0 +1,191 @@
+"""Mamba-2 (SSD, state-space duality) layer [arXiv:2405.21060].
+
+Training/prefill uses the chunked block-decomposition: a ``lax.scan`` over
+sequence chunks carries the inter-chunk SSM state; within a chunk the
+quadratic "attention-like" form runs on the MXU. Decode is the O(1) state
+recurrence. Memory is bounded by the chunk size (never an (S x S) matrix).
+
+Sharding: heads (and d_inner) shard over the "model" axis; B/C projections
+are group-shared (n_groups=1 -> replicated); out_proj contracts the sharded
+d_inner -> one all-reduce per layer, exactly like a Megatron MLP.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import PD
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    return d_in, nheads, s.head_dim, s.n_groups, s.d_state, s.d_conv
+
+
+def ssm_desc(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    d_in, h, p, g, n, dc = _dims(cfg)
+    return {
+        "w_z": PD((d, d_in), ("embed", "ssm_inner")),
+        "w_x": PD((d, d_in), ("embed", "ssm_inner")),
+        "w_B": PD((d, g * n), ("embed", None)),
+        "w_C": PD((d, g * n), ("embed", None)),
+        "w_dt": PD((d, h), ("embed", "ssm_heads")),
+        "conv_x": PD((dc, d_in), (None, "ssm_inner")),
+        "conv_B": PD((dc, g * n), (None, None)),
+        "conv_C": PD((dc, g * n), (None, None)),
+        "conv_b": PD((d_in + 2 * g * n,), (None,), "zeros"),
+        "dt_bias": PD((h,), ("ssm_heads",), "ssm_dt"),
+        "A_log": PD((h,), ("ssm_heads",), "ssm_a"),
+        "D": PD((h,), ("ssm_heads",), "ones"),
+        "norm_scale": PD((d_in,), ("ssm_inner",), "ones"),
+        "w_out": PD((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, prefix: jax.Array = None) -> jax.Array:
+    """Depthwise causal conv: x (B,S,C), w (K,C). prefix: (B,K-1,C) history."""
+    k = w.shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prefix, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i: i + x.shape[1]] * w[i].astype(x.dtype)
+    return out
+
+
+def _ssd_chunk_scan(x, dt, A, B, C, chunk: int, h0):
+    """Chunked SSD. x:(b,s,h,p) dt:(b,s,h) A:(h,) B,C:(b,s,g,n). h0:(b,h,p,n).
+
+    Returns y:(b,s,h,p), h_final.
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hpg = h // g
+    nc = max(s // chunk, 1)
+    c = s // nc
+    xr = x.reshape(b, nc, c, h, p)
+    dtr = dt.reshape(b, nc, c, h)
+    # expand groups -> heads
+    Br = jnp.repeat(B.reshape(b, nc, c, g, n), hpg, axis=3)
+    Cr = jnp.repeat(C.reshape(b, nc, c, g, n), hpg, axis=3)
+
+    def step(hstate, inp):
+        xc, dtc, Bc, Cc = inp                        # (b,c,h,p) (b,c,h) (b,c,h,n)
+        dA = dtc * A.astype(jnp.float32)             # (b,c,h) negative
+        cs = jnp.cumsum(dA, axis=1)                  # inclusive cumsum
+        # intra-chunk: L[l,s'] = exp(cs_l - cs_s') for l >= s'.
+        # Mask the exponent (not the result): exp overflows in the upper
+        # triangle and where() would leak NaN through the cotangent.
+        ldiff = cs[:, :, None, :] - cs[:, None, :, :]        # (b,l,s',h)
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        ldiff = jnp.where(mask[None, :, :, None], ldiff, -1e30)
+        L = jnp.exp(ldiff)
+        scores = jnp.einsum("blhn,bshn->blsh", Cc, Bc).astype(jnp.float32)
+        scores = scores * L * dtc[:, None, :, :]
+        y_diag = jnp.einsum("blsh,bshp->blhp", scores.astype(x.dtype),
+                            xc.astype(x.dtype))
+        # inter-chunk: contribution of carried state
+        decay_in = jnp.exp(cs)                               # (b,l,h)
+        y_off = jnp.einsum("blhn,bhpn,blh->blhp", Cc.astype(jnp.float32),
+                           hstate, decay_in).astype(x.dtype)
+        # new state
+        decay_out = jnp.exp(cs[:, -1:, :] - cs)              # (b,l,h)
+        dstate = jnp.einsum("blhn,blh,blh,blhp->bhpn",
+                            Bc.astype(jnp.float32), decay_out, dtc,
+                            xc.astype(jnp.float32))
+        hnew = jnp.exp(cs[:, -1, :])[:, :, None, None] * hstate + dstate
+        return hnew, y_diag + y_off
+
+    xs = (xr.swapaxes(0, 1), dtr.swapaxes(0, 1),
+          Br.swapaxes(0, 1), Cr.swapaxes(0, 1))
+    # Remat: the (l x l) intra-chunk decay/score blocks must not be saved
+    # per chunk for backward (O(S*chunk) memory otherwise).
+    h_final, ys = jax.lax.scan(jax.checkpoint(step), h0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, h, p)
+    return y, h_final
+
+
+def apply_ssm(cfg: ModelConfig, prm: Dict, x: jax.Array,
+              state: Dict = None) -> Tuple[jax.Array, Dict]:
+    """Full Mamba-2 mixer. x: (B,S,d). state: None (train) or decode state."""
+    s_cfg = cfg.ssm
+    d_in, h, p, g, n, dc = _dims(cfg)
+    b, s, d = x.shape
+    dt_x = x.dtype
+
+    z = jnp.einsum("bsd,de->bse", x, prm["w_z"].astype(dt_x))
+    xin = jnp.einsum("bsd,de->bse", x, prm["w_x"].astype(dt_x))
+    Bv = jnp.einsum("bsd,de->bse", x, prm["w_B"].astype(dt_x))
+    Cv = jnp.einsum("bsd,de->bse", x, prm["w_C"].astype(dt_x))
+    dt = jnp.einsum("bsd,dh->bsh", x, prm["w_dt"].astype(dt_x))
+
+    bias = prm["conv_b"].astype(dt_x)
+    bx, bB, bC = bias[:d_in], bias[d_in:d_in + g * n], bias[d_in + g * n:]
+
+    new_state = {}
+    if state is None:
+        xin_c = jax.nn.silu(_causal_conv(xin, prm["conv_x"]) + bx)
+        B_c = jax.nn.silu(_causal_conv(Bv, prm["conv_B"]) + bB)
+        C_c = jax.nn.silu(_causal_conv(Cv, prm["conv_C"]) + bC)
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    else:
+        conv_hist = state["conv"]                    # (B, dc-1, d_in+2gn)
+        cat = jnp.concatenate([xin, Bv, Cv], axis=-1)
+        xin_c = jax.nn.silu(_causal_conv(xin, prm["conv_x"], conv_hist[..., :d_in]) + bx)
+        B_c = jax.nn.silu(_causal_conv(Bv, prm["conv_B"], conv_hist[..., d_in:d_in + g * n]) + bB)
+        C_c = jax.nn.silu(_causal_conv(Cv, prm["conv_C"], conv_hist[..., d_in + g * n:]) + bC)
+        new_state["conv"] = jnp.concatenate([conv_hist, cat], axis=1)[:, -(dc - 1):]
+        h0 = state["ssd"]                            # (B,h,p,n) f32
+
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + prm["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(prm["A_log"].astype(jnp.float32))
+    xh = xin_c.reshape(b, s, h, p)
+    Bh = B_c.reshape(b, s, g, n)
+    Ch = C_c.reshape(b, s, g, n)
+
+    if state is None and s > 1:
+        y, h_final = _ssd_chunk_scan(xh, dt_sp, A, Bh, Ch, s_cfg.chunk_size, h0)
+    else:
+        # single-step (or tiny) recurrence
+        def one(hst, inp):
+            xt, dtt, Bt, Ct = inp                    # (b,h,p) (b,h) (b,g,n)
+            Bt = jnp.repeat(Bt, h // g, axis=1)
+            Ct = jnp.repeat(Ct, h // g, axis=1)
+            dA = jnp.exp(dtt * A)                    # (b,h)
+            upd = jnp.einsum("bh,bhp,bhn->bhpn", dtt, xt.astype(jnp.float32),
+                             Bt.astype(jnp.float32))
+            hnew = dA[:, :, None, None] * hst + upd
+            yt = jnp.einsum("bhpn,bhn->bhp", hnew, Ct.astype(jnp.float32))
+            return hnew, yt.astype(x.dtype)
+        xs = (xh.swapaxes(0, 1), dt_sp.swapaxes(0, 1),
+              Bh.swapaxes(0, 1), Ch.swapaxes(0, 1))
+        h_final, ys = jax.lax.scan(one, h0, xs)
+        y = ys.swapaxes(0, 1)
+
+    if state is not None:
+        new_state["ssd"] = h_final
+
+    y = y + xh * prm["D"].astype(dt_x)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    # gated RMSNorm
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps)).astype(dt_x) * prm["norm_scale"].astype(dt_x)
+    out = jnp.einsum("bse,ed->bsd", y, prm["w_out"].astype(dt_x))
+    return out, new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    d_in, h, p, g, n, dc = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, dc - 1, d_in + 2 * g * n), dtype),
+        "ssd": jnp.zeros((batch, h, p, n), jnp.float32),
+    }

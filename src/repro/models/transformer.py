@@ -1,0 +1,476 @@
+"""Decoder-LM assembly for the dense / moe / ssm / hybrid / vlm families.
+
+One functional model, three entry points:
+
+- ``forward``        : (tokens|embeds, positions) -> final hidden states
+                       (training / prefill trunk; layers run under
+                       ``lax.scan`` + optional remat)
+- ``prefill``        : forward + emit per-layer KV/SSM caches
+- ``decode_step``    : one token through the cached trunk
+
+Parameters are nested dicts built from PD descriptors (see layers.py); the
+same descriptor tree yields init, abstract shapes, and sharding specs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (PD, apply_mlp, apply_norm, mlp_desc,
+                                 norm_desc)
+from repro.models.moe import apply_moe, moe_desc
+from repro.models.rglru import apply_rglru, init_rglru_state, rglru_desc
+from repro.models.ssm import apply_ssm, init_ssm_state, ssm_desc
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def dp_axes_of(mesh) -> Tuple[str, ...]:
+    if mesh is None:
+        return ("data",)
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def cst(x, mesh, spec: P):
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _stack_desc(desc: Dict, n: int) -> Dict:
+    return jax.tree.map(lambda pd: pd.stacked(n), desc,
+                        is_leaf=lambda x: isinstance(x, PD))
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if not cfg.remat:
+        return fn
+    policy = getattr(jax.checkpoint_policies, cfg.remat_policy, None)
+    if policy is None:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# per-layer descriptors
+# ---------------------------------------------------------------------------
+
+def _dense_block_desc(cfg: ModelConfig, d_ff: int = 0) -> Dict:
+    return {
+        "ln1": norm_desc(cfg, cfg.d_model),
+        "attn": attn.attn_desc(cfg),
+        "ln2": norm_desc(cfg, cfg.d_model),
+        "mlp": mlp_desc(cfg, cfg.d_model, d_ff or cfg.d_ff),
+    }
+
+
+def _moe_block_desc(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": norm_desc(cfg, cfg.d_model),
+        "attn": attn.attn_desc(cfg),
+        "ln2": norm_desc(cfg, cfg.d_model),
+        "moe": moe_desc(cfg),
+    }
+
+
+def _ssm_block_desc(cfg: ModelConfig) -> Dict:
+    return {"ln1": norm_desc(cfg, cfg.d_model), "ssm": ssm_desc(cfg)}
+
+
+def _hybrid_layer_desc(cfg: ModelConfig, kind: str) -> Dict:
+    mixer = rglru_desc(cfg) if kind == "rglru" else attn.attn_desc(cfg)
+    return {
+        "ln1": norm_desc(cfg, cfg.d_model),
+        "mixer": mixer,
+        "ln2": norm_desc(cfg, cfg.d_model),
+        "mlp": mlp_desc(cfg, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _hybrid_layout(cfg: ModelConfig) -> Tuple[int, int]:
+    """(#full pattern groups, #remainder layers). Remainders follow pattern."""
+    pat = len(cfg.hybrid.pattern)
+    return cfg.num_layers // pat, cfg.num_layers % pat
+
+
+def param_desc(cfg: ModelConfig) -> Dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    desc: Dict[str, Any] = {"embed": PD((v, d), ("vocab", "embed"))}
+    if cfg.rope == "learned_abs":
+        desc["pos_embed"] = PD((32768, d), (None, "embed"))
+    if cfg.family in ("dense", "vlm"):
+        desc["blocks"] = _stack_desc(_dense_block_desc(cfg), cfg.num_layers)
+    elif cfg.family == "moe":
+        m = cfg.moe
+        n_moe = cfg.num_layers - len(m.dense_layers)
+        desc["blocks"] = _stack_desc(_moe_block_desc(cfg), n_moe)
+        if m.dense_layers:
+            desc["dense_blocks"] = _stack_desc(
+                _dense_block_desc(cfg, m.dense_layer_d_ff), len(m.dense_layers))
+    elif cfg.family == "ssm":
+        desc["blocks"] = _stack_desc(_ssm_block_desc(cfg), cfg.num_layers)
+    elif cfg.family == "hybrid":
+        ngroups, nrem = _hybrid_layout(cfg)
+        group = {f"l{i}_{k}": _hybrid_layer_desc(cfg, k)
+                 for i, k in enumerate(cfg.hybrid.pattern)}
+        desc["groups"] = _stack_desc(group, ngroups)
+        if nrem:
+            tail = {f"l{i}_{k}": _hybrid_layer_desc(cfg, k)
+                    for i, k in enumerate(cfg.hybrid.pattern[:nrem])}
+            desc["tail"] = tail
+    else:
+        raise ValueError(cfg.family)
+    desc["final_norm"] = norm_desc(cfg, d)
+    if not cfg.tie_embeddings:
+        desc["lm_head"] = PD((d, v), ("embed", "vocab"))
+    return desc
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _attn_block(cfg: ModelConfig, prm: Dict, x, positions, mesh,
+                *, local: bool = False, cache: Optional[Dict] = None,
+                cache_pos=None, emit_kv: bool = False):
+    """Self-attention sub-block. Returns (x, new_kv or None)."""
+    dp = dp_axes_of(mesh)
+    h = apply_norm(cfg, prm["ln1"], x)
+    q, k, v = attn.qkv_proj(cfg, prm["attn"], h, positions)
+    new_kv = None
+    if cache is not None:
+        kc, vc = cache["k"], cache["v"]
+        w = kc.shape[1]
+        slot = cache_pos % w if local else cache_pos
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        valid = jnp.minimum(cache_pos + 1, w)
+        o = attn.decode_attention(cfg, q, kc, vc, valid)
+        new_kv = (k, v)
+    else:
+        q = cst(q, mesh, P(dp, None, "model", None))
+        if local:
+            o = attn.local_attention(cfg, q, k, v, window=cfg.hybrid.window)
+        else:
+            o = attn.chunked_attention(cfg, q, k, v, causal=True)
+        if emit_kv:
+            new_kv = (k, v)
+    x = x + attn.out_proj(prm["attn"], o)
+    return cst(x, mesh, P(dp, None, None)), new_kv
+
+
+def _mlp_block(cfg, prm, x, mesh):
+    h = apply_norm(cfg, prm["ln2"], x)
+    return cst(x + apply_mlp(cfg, prm["mlp"], h), mesh, P(dp_axes_of(mesh), None, None))
+
+
+def _dense_layer(cfg, prm, x, positions, mesh, cache=None, cache_pos=None,
+                 emit_kv=False, local=False):
+    x, kv = _attn_block(cfg, prm, x, positions, mesh, local=local,
+                        cache=cache, cache_pos=cache_pos, emit_kv=emit_kv)
+    return _mlp_block(cfg, prm, x, mesh), kv
+
+
+def _moe_layer(cfg, prm, x, positions, mesh, cache=None, cache_pos=None,
+               emit_kv=False):
+    x, kv = _attn_block(cfg, prm, x, positions, mesh,
+                        cache=cache, cache_pos=cache_pos, emit_kv=emit_kv)
+    h = apply_norm(cfg, prm["ln2"], x)
+    y, aux = apply_moe(cfg, prm["moe"], h, mesh, dp_axes_of(mesh), "model")
+    x = cst(x + y, mesh, P(dp_axes_of(mesh), None, None))
+    return x, kv, aux
+
+
+def _ssm_layer(cfg, prm, x, mesh, state=None):
+    h = apply_norm(cfg, prm["ln1"], x)
+    y, new_state = apply_ssm(cfg, prm["ssm"], h, state)
+    return cst(x + y, mesh, P(dp_axes_of(mesh), None, None)), new_state
+
+
+def _hybrid_layer(cfg, prm, kind, x, positions, mesh, state=None,
+                  cache_pos=None):
+    """One Griffin layer: mixer + MLP. state: rglru-state or kv-cache dict."""
+    if kind == "rglru":
+        h = apply_norm(cfg, prm["ln1"], x)
+        y, new_state = apply_rglru(cfg, prm["mixer"], h, state)
+        x = cst(x + y, mesh, P(dp_axes_of(mesh), None, None))
+    else:
+        wrapped = {"ln1": prm["ln1"], "attn": prm["mixer"]}
+        if state is not None:
+            x, kv = _attn_block(cfg, wrapped, x, positions, mesh, local=True,
+                                cache=state, cache_pos=cache_pos)
+            w = state["k"].shape[1]
+            slot = cache_pos % w
+            new_state = {
+                "k": jax.lax.dynamic_update_slice_in_dim(state["k"], kv[0], slot, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(state["v"], kv[1], slot, axis=1),
+            }
+        else:
+            x, _ = _attn_block(cfg, wrapped, x, positions, mesh, local=True)
+            new_state = None
+    return _mlp_block(cfg, prm, x, mesh), new_state
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, params: Dict, batch: Dict, mesh) -> jax.Array:
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.embeds_input:
+        x = batch["embeds"].astype(dt)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if cfg.rope == "learned_abs":
+        pos = batch["positions"]
+        x = x + jnp.take(params["pos_embed"], pos, axis=0).astype(dt)
+    return cst(x, mesh, P(dp_axes_of(mesh), None, None))
+
+
+def logits_fn(cfg: ModelConfig, params: Dict, x: jax.Array, mesh) -> jax.Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    from repro.models.layers import softcap
+    logits = softcap(logits, cfg.logit_softcap)
+    return cst(logits, mesh, P(dp_axes_of(mesh), None, "model"))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill trunk)
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict, mesh=None,
+            emit_cache: bool = False):
+    """Returns (hidden_states, aux_loss, cache_or_None)."""
+    x = embed_inputs(cfg, params, batch, mesh)
+    positions = batch["positions"]
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+
+    if cfg.family in ("dense", "vlm"):
+        def body(carry, prm):
+            x, aux = carry
+            x, kv = _dense_layer(cfg, prm, x, positions, mesh, emit_kv=emit_cache)
+            return (x, aux), kv
+        body = _maybe_remat(cfg, body)
+        (x, aux), kvs = jax.lax.scan(body, (x, aux), params["blocks"])
+        if emit_cache:
+            cache = {"k": kvs[0], "v": kvs[1]}
+
+    elif cfg.family == "moe":
+        m = cfg.moe
+        dense_kvs = []
+        if m.dense_layers:  # dense layers first (DeepSeek: layer 0)
+            def dbody(carry, prm):
+                x, aux = carry
+                x, kv = _dense_layer(cfg, prm, x, positions, mesh, emit_kv=emit_cache)
+                return (x, aux), kv
+            dbody = _maybe_remat(cfg, dbody)
+            (x, aux), dkvs = jax.lax.scan(dbody, (x, aux), params["dense_blocks"])
+            dense_kvs = dkvs
+        def body(carry, prm):
+            x, aux = carry
+            x, kv, a = _moe_layer(cfg, prm, x, positions, mesh, emit_kv=emit_cache)
+            return (x, aux + a), kv
+        body = _maybe_remat(cfg, body)
+        (x, aux), kvs = jax.lax.scan(body, (x, aux), params["blocks"])
+        if emit_cache:
+            if m.dense_layers:
+                k = jnp.concatenate([dense_kvs[0], kvs[0]], axis=0)
+                v = jnp.concatenate([dense_kvs[1], kvs[1]], axis=0)
+            else:
+                k, v = kvs
+            cache = {"k": k, "v": v}
+
+    elif cfg.family == "ssm":
+        def body(carry, prm):
+            x, aux = carry
+            x, _ = _ssm_layer(cfg, prm, x, mesh)
+            return (x, aux), None
+        body = _maybe_remat(cfg, body)
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"])
+        if emit_cache:
+            raise NotImplementedError("SSM prefill uses prefill() path")
+
+    elif cfg.family == "hybrid":
+        pat = cfg.hybrid.pattern
+        def gbody(carry, prm):
+            x, aux = carry
+            for i, kind in enumerate(pat):
+                x, _ = _hybrid_layer(cfg, prm[f"l{i}_{kind}"], kind, x,
+                                     positions, mesh)
+            return (x, aux), None
+        gbody = _maybe_remat(cfg, gbody)
+        (x, aux), _ = jax.lax.scan(gbody, (x, aux), params["groups"])
+        _, nrem = _hybrid_layout(cfg)
+        for i in range(nrem):
+            kind = pat[i]
+            x, _ = _hybrid_layer(cfg, params["tail"][f"l{i}_{kind}"], kind, x,
+                                 positions, mesh)
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    nkv, hd = cfg.num_kv_heads, cfg.head_dim
+    if cfg.family in ("dense", "vlm", "moe"):
+        L = cfg.num_layers
+        return {
+            "k": jnp.zeros((L, batch, max_len, nkv, hd), dt),
+            "v": jnp.zeros((L, batch, max_len, nkv, hd), dt),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "ssm":
+        st = init_ssm_state(cfg, batch, dt)
+        return {
+            "conv": jnp.zeros((cfg.num_layers,) + st["conv"].shape, dt),
+            "ssd": jnp.zeros((cfg.num_layers,) + st["ssd"].shape, jnp.float32),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        ngroups, nrem = _hybrid_layout(cfg)
+        w = min(cfg.hybrid.window, max_len)
+        rst = init_rglru_state(cfg, batch, dt)
+        pat = cfg.hybrid.pattern
+        n_rec_g = sum(1 for k in pat if k == "rglru")
+        cache = {
+            "g_conv": jnp.zeros((ngroups, n_rec_g) + rst["conv"].shape, dt),
+            "g_lru": jnp.zeros((ngroups, n_rec_g) + rst["lru"].shape, jnp.float32),
+            "g_k": jnp.zeros((ngroups, batch, w, cfg.num_kv_heads, cfg.head_dim), dt),
+            "g_v": jnp.zeros((ngroups, batch, w, cfg.num_kv_heads, cfg.head_dim), dt),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+        n_rec_t = sum(1 for k in pat[:nrem] if k == "rglru")
+        if nrem:
+            cache["t_conv"] = jnp.zeros((n_rec_t,) + rst["conv"].shape, dt)
+            cache["t_lru"] = jnp.zeros((n_rec_t,) + rst["lru"].shape, jnp.float32)
+        return cache
+    raise ValueError(cfg.family)
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, batch: Dict,
+                mesh=None) -> Tuple[jax.Array, Dict]:
+    """One token: batch has tokens/embeds (B,1) and positions; returns
+    (logits (B,1,V), new_cache)."""
+    x = embed_inputs(cfg, params, batch, mesh)
+    positions = batch["positions"]
+    pos = cache["pos"]
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        m = cfg.moe if cfg.family == "moe" else None
+        n_dense = len(m.dense_layers) if m else 0
+        # scan over dense blocks first (if any), then moe/dense trunk
+        k_cache, v_cache = cache["k"], cache["v"]
+        new_ks, new_vs = [], []
+        if cfg.family == "moe" and n_dense:
+            def dbody(x, xs):
+                prm, kc, vc = xs
+                x, kv = _dense_layer(cfg, prm, x, positions, mesh,
+                                     cache={"k": kc, "v": vc}, cache_pos=pos)
+                return x, kv
+            x, kvs = jax.lax.scan(dbody, x,
+                                  (params["dense_blocks"],
+                                   k_cache[:n_dense], v_cache[:n_dense]))
+            new_ks.append(kvs[0]); new_vs.append(kvs[1])
+
+        if cfg.family == "moe":
+            def mbody(x, xs):
+                prm, kc, vc = xs
+                x, kv, _ = _moe_layer(cfg, prm, x, positions, mesh,
+                                      cache={"k": kc, "v": vc}, cache_pos=pos)
+                return x, kv
+            x, kvs = jax.lax.scan(mbody, x,
+                                  (params["blocks"], k_cache[n_dense:],
+                                   v_cache[n_dense:]))
+        else:
+            def body(x, xs):
+                prm, kc, vc = xs
+                x, kv = _dense_layer(cfg, prm, x, positions, mesh,
+                                     cache={"k": kc, "v": vc}, cache_pos=pos)
+                return x, kv
+            x, kvs = jax.lax.scan(body, x, (params["blocks"], k_cache, v_cache))
+        new_ks.append(kvs[0]); new_vs.append(kvs[1])
+        k_new = jnp.concatenate(new_ks, axis=0) if len(new_ks) > 1 else new_ks[0]
+        v_new = jnp.concatenate(new_vs, axis=0) if len(new_vs) > 1 else new_vs[0]
+        new_cache = dict(cache)
+        new_cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k_new, (0, 0, pos, 0, 0))
+        new_cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v_new, (0, 0, pos, 0, 0))
+        new_cache["pos"] = pos + 1
+
+    elif cfg.family == "ssm":
+        def body(x, xs):
+            prm, conv, ssd = xs
+            x, st = _ssm_layer(cfg, prm, x, mesh,
+                               state={"conv": conv, "ssd": ssd})
+            return x, (st["conv"], st["ssd"])
+        x, (convs, ssds) = jax.lax.scan(
+            body, x, (params["blocks"], cache["conv"], cache["ssd"]))
+        new_cache = dict(cache, conv=convs, ssd=ssds, pos=pos + 1)
+
+    elif cfg.family == "hybrid":
+        pat = cfg.hybrid.pattern
+        rec_idx = [i for i, k in enumerate(pat) if k == "rglru"]
+
+        def gbody(x, xs):
+            prm, conv, lru, kc, vc = xs
+            new_conv, new_lru = [], []
+            ri = 0
+            for i, kind in enumerate(pat):
+                if kind == "rglru":
+                    st = {"conv": conv[ri], "lru": lru[ri]}
+                    x, nst = _hybrid_layer(cfg, prm[f"l{i}_{kind}"], kind, x,
+                                           positions, mesh, state=st)
+                    new_conv.append(nst["conv"]); new_lru.append(nst["lru"])
+                    ri += 1
+                else:
+                    st = {"k": kc, "v": vc}
+                    x, nst = _hybrid_layer(cfg, prm[f"l{i}_{kind}"], kind, x,
+                                           positions, mesh, state=st,
+                                           cache_pos=pos)
+                    kc, vc = nst["k"], nst["v"]
+            return x, (jnp.stack(new_conv), jnp.stack(new_lru), kc, vc)
+
+        x, (convs, lrus, ks, vs) = jax.lax.scan(
+            gbody, x, (params["groups"], cache["g_conv"], cache["g_lru"],
+                       cache["g_k"], cache["g_v"]))
+        new_cache = dict(cache, g_conv=convs, g_lru=lrus, g_k=ks, g_v=vs)
+        _, nrem = _hybrid_layout(cfg)
+        ri = 0
+        t_conv, t_lru = [], []
+        for i in range(nrem):
+            kind = pat[i]
+            st = {"conv": cache["t_conv"][ri], "lru": cache["t_lru"][ri]}
+            x, nst = _hybrid_layer(cfg, params["tail"][f"l{i}_{kind}"], kind,
+                                   x, positions, mesh, state=st)
+            t_conv.append(nst["conv"]); t_lru.append(nst["lru"])
+            ri += 1
+        if nrem:
+            new_cache["t_conv"] = jnp.stack(t_conv)
+            new_cache["t_lru"] = jnp.stack(t_lru)
+        new_cache["pos"] = pos + 1
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_fn(cfg, params, x, mesh)
+    return logits, new_cache

@@ -1,0 +1,207 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+The conv audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, S_enc, d). The encoder adds
+sinusoidal positions and runs bidirectional attention; the decoder uses
+learned positions, causal self-attention, and cross-attention to the
+encoder output. Decode caches both the self-attn KV and the (static)
+cross-attn KV.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (PD, apply_mlp, apply_norm, mlp_desc,
+                                 norm_desc, sinusoidal_positions)
+from repro.models.transformer import _maybe_remat, _stack_desc, cst, dp_axes_of
+
+
+def _enc_block_desc(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": norm_desc(cfg, cfg.d_model),
+        "attn": attn.attn_desc(cfg),
+        "ln2": norm_desc(cfg, cfg.d_model),
+        "mlp": mlp_desc(cfg, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_block_desc(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": norm_desc(cfg, cfg.d_model),
+        "self_attn": attn.attn_desc(cfg),
+        "ln_x": norm_desc(cfg, cfg.d_model),
+        "cross_attn": attn.attn_desc(cfg),
+        "ln2": norm_desc(cfg, cfg.d_model),
+        "mlp": mlp_desc(cfg, cfg.d_model, cfg.d_ff),
+    }
+
+
+def param_desc(cfg: ModelConfig) -> Dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    e = cfg.encdec
+    return {
+        "embed": PD((v, d), ("vocab", "embed")),
+        "pos_embed": PD((e.max_source_positions, d), (None, "embed")),
+        "enc_blocks": _stack_desc(_enc_block_desc(cfg), e.encoder_layers),
+        "enc_norm": norm_desc(cfg, d),
+        "dec_blocks": _stack_desc(_dec_block_desc(cfg), cfg.num_layers),
+        "final_norm": norm_desc(cfg, d),
+    }
+
+
+def _self_block(cfg, prm, x, positions, mesh, causal, cache=None, cache_pos=None,
+                emit_kv=False, key="attn"):
+    dp = dp_axes_of(mesh)
+    h = apply_norm(cfg, prm["ln1"], x)
+    q, k, v = attn.qkv_proj(cfg, prm[key], h, positions)
+    new_kv = None
+    if cache is not None:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_pos, axis=1)
+        o = attn.decode_attention(cfg, q, kc, vc, cache_pos + 1)
+        new_kv = (k, v)
+    else:
+        o = attn.chunked_attention(cfg, q, k, v, causal=causal)
+        if emit_kv:
+            new_kv = (k, v)
+    return cst(x + attn.out_proj(prm[key], o), mesh, P(dp, None, None)), new_kv
+
+
+def _cross_block(cfg, prm, x, enc_kv, mesh):
+    """Cross-attention with precomputed encoder K/V."""
+    dp = dp_axes_of(mesh)
+    h = apply_norm(cfg, prm["ln_x"], x)
+    p = prm["cross_attn"]
+    dt = h.dtype
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+    k, v = enc_kv
+    o = attn.chunked_attention(cfg, q, k, v, causal=False)
+    return cst(x + attn.out_proj(p, o), mesh, P(dp, None, None))
+
+
+def _cross_kv(cfg, prm, enc_out):
+    p = prm["cross_attn"]
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return k, v
+
+
+def _mlp_res(cfg, prm, x, mesh):
+    h = apply_norm(cfg, prm["ln2"], x)
+    return cst(x + apply_mlp(cfg, prm["mlp"], h),
+               mesh, P(dp_axes_of(mesh), None, None))
+
+
+def encode(cfg: ModelConfig, params: Dict, frames: jax.Array, mesh=None):
+    """frames: (B, S_enc, d) precomputed frame embeddings (frontend stub)."""
+    dt = jnp.dtype(cfg.dtype)
+    b, s, d = frames.shape
+    x = frames.astype(dt) + sinusoidal_positions(s, d).astype(dt)[None]
+    x = cst(x, mesh, P(dp_axes_of(mesh), None, None))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, prm):
+        x, _ = _self_block(cfg, prm, x, positions, mesh, causal=False)
+        return _mlp_res(cfg, prm, x, mesh), None
+    body = _maybe_remat(cfg, body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def decode_train(cfg: ModelConfig, params: Dict, enc_out: jax.Array,
+                 tokens: jax.Array, mesh=None):
+    """Teacher-forced decoder pass. Returns final hidden states."""
+    dt = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = x + params["pos_embed"][:s].astype(dt)[None]
+    x = cst(x, mesh, P(dp_axes_of(mesh), None, None))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, prm):
+        x, _ = _self_block(cfg, prm, x, positions, mesh, causal=True,
+                           key="self_attn")
+        x = _cross_block(cfg, prm, x, _cross_kv(cfg, prm, enc_out), mesh)
+        return _mlp_res(cfg, prm, x, mesh), None
+    body = _maybe_remat(cfg, body)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    return apply_norm(cfg, params["final_norm"], x)
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict, mesh=None,
+            emit_cache: bool = False):
+    """Unified trunk entry (matches transformer.forward signature)."""
+    enc_out = encode(cfg, params, batch["embeds"], mesh)
+    x = decode_train(cfg, params, enc_out, batch["tokens"], mesh)
+    return x, jnp.zeros((), jnp.float32), None
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    L, nkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((L, batch, max_len, nkv, hd), dt),
+        "v": jnp.zeros((L, batch, max_len, nkv, hd), dt),
+        "cross_k": jnp.zeros((L, batch, enc_len, nkv, hd), dt),
+        "cross_v": jnp.zeros((L, batch, enc_len, nkv, hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prime_cache(cfg: ModelConfig, params: Dict, cache: Dict,
+                enc_out: jax.Array) -> Dict:
+    """Precompute cross-attention K/V from encoder output."""
+    def body(_, prm):
+        return None, _cross_kv(cfg, prm, enc_out)
+    _, (ck, cv) = jax.lax.scan(body, None, params["dec_blocks"])
+    return dict(cache, cross_k=ck, cross_v=cv)
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, batch: Dict,
+                mesh=None):
+    dt = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]                     # (B, 1)
+    pos = cache["pos"]
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1)[None].astype(dt)
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+
+    def body(x, xs):
+        prm, kc, vc, ck, cv = xs
+        x, kv = _self_block(cfg, prm, x, positions, mesh, causal=True,
+                            cache={"k": kc, "v": vc}, cache_pos=pos,
+                            key="self_attn")
+        h = apply_norm(cfg, prm["ln_x"], x)
+        p = prm["cross_attn"]
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(dt))
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(dt)
+        o = attn.decode_attention(cfg, q, ck, cv, jnp.asarray(ck.shape[1]))
+        x = x + attn.out_proj(p, o)
+        x = _mlp_res(cfg, prm, x, mesh)
+        return x, kv
+
+    x, kvs = jax.lax.scan(body, x, (params["dec_blocks"], cache["k"],
+                                    cache["v"], cache["cross_k"],
+                                    cache["cross_v"]))
+    new_cache = dict(cache)
+    new_cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kvs[0], (0, 0, pos, 0, 0))
+    new_cache["v"] = jax.lax.dynamic_update_slice(cache["v"], kvs[1], (0, 0, pos, 0, 0))
+    new_cache["pos"] = pos + 1
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(dt))
+    return logits, new_cache

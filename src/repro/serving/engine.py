@@ -1,0 +1,43 @@
+"""Serving: prefill + single-token decode step factories."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs.base import ModelConfig
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None):
+    """serve_step(params, cache, batch) -> (logits, new_cache).
+
+    ``batch`` carries the one new token (or embed) + positions; the KV/SSM
+    cache holds ``seq_len`` of context, matching the decode_* input shapes.
+    """
+    def serve_step(params, cache, batch):
+        compute_params = jax.tree.map(
+            lambda p: p.astype(jnp.dtype(cfg.dtype)) if p.dtype == jnp.float32 else p,
+            params)
+        return models.decode_step(cfg, compute_params, cache, batch, mesh)
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None):
+    """prefill(params, batch) -> (last_logits, cache)."""
+    def prefill(params, batch):
+        compute_params = jax.tree.map(
+            lambda p: p.astype(jnp.dtype(cfg.dtype)) if p.dtype == jnp.float32 else p,
+            params)
+        hidden, _, cache = models.forward(cfg, compute_params, batch, mesh,
+                                          emit_cache=cfg.family in
+                                          ("dense", "vlm", "moe"))
+        last = hidden[:, -1:, :]
+        logits = models.logits_fn(cfg, compute_params, last, mesh)
+        return logits, cache
+    return prefill
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)

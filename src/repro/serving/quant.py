@@ -1,0 +1,79 @@
+"""Weight-only int8 quantization for serving (hillclimb: halves the
+parameter-read memory term of decode cells).
+
+Per-output-channel symmetric scales (last dim); dequant happens at load
+into the matmul — on TPU the int8->bf16 convert fuses into the dot's
+operand read, so HBM traffic is the int8 bytes. Embeddings / norms /
+vectors stay bf16 (quality), as do conv kernels.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PD, is_pd
+
+
+def _quantizable(pd: PD) -> bool:
+    return len(pd.shape) >= 2 and pd.init == "normal" and \
+        pd.axes[0] != "vocab"  # keep embedding bf16 (tied logits quality)
+
+
+def quantize_params(params: Dict, desc: Dict) -> Dict:
+    """params tree -> tree with {"q": int8, "s": bf16-scale} leaves for
+    quantizable weights."""
+    def q(p, pd):
+        if not _quantizable(pd):
+            return p.astype(jnp.bfloat16) if p.dtype == jnp.float32 else p
+        a = jnp.max(jnp.abs(p.astype(jnp.float32)), axis=tuple(
+            range(p.ndim - 1)), keepdims=False)
+        s = jnp.maximum(a, 1e-8) / 127.0
+        qv = jnp.clip(jnp.round(p.astype(jnp.float32) / s), -127, 127)
+        return {"q": qv.astype(jnp.int8), "s": s.astype(jnp.bfloat16)}
+    return jax.tree.map(q, params, desc, is_leaf=lambda x: is_pd(x))
+
+
+def dequantize_params(qparams: Dict, dtype=jnp.bfloat16) -> Dict:
+    def dq(leaf):
+        if isinstance(leaf, dict) and set(leaf) == {"q", "s"}:
+            return (leaf["q"].astype(jnp.float32) *
+                    leaf["s"].astype(jnp.float32)).astype(dtype)
+        return leaf
+    return jax.tree.map(dq, qparams,
+                        is_leaf=lambda x: isinstance(x, dict)
+                        and set(x) == {"q", "s"})
+
+
+def abstract_qparams(cfg, desc: Dict) -> Dict:
+    """ShapeDtypeStructs for the quantized tree (dry-run)."""
+    def one(pd: PD):
+        if not _quantizable(pd):
+            return jax.ShapeDtypeStruct(pd.shape, jnp.bfloat16)
+        return {"q": jax.ShapeDtypeStruct(pd.shape, jnp.int8),
+                "s": jax.ShapeDtypeStruct((pd.shape[-1],), jnp.bfloat16)}
+    return jax.tree.map(one, desc, is_leaf=is_pd)
+
+
+def qparam_shardings(cfg, desc: Dict, mesh) -> Dict:
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed.sharding import spec_for
+
+    def one(pd: PD):
+        spec = spec_for(pd, cfg, mesh)
+        if not _quantizable(pd):
+            return NamedSharding(mesh, spec)
+        axes = list(spec) + [None] * (len(pd.shape) - len(spec))
+        return {"q": NamedSharding(mesh, spec),
+                "s": NamedSharding(mesh, P(axes[-1]))}
+    return jax.tree.map(one, desc, is_leaf=is_pd)
+
+
+def make_quantized_serve_step(cfg, mesh=None):
+    from repro import models
+
+    def serve_step(qparams, cache, batch):
+        params = dequantize_params(qparams, jnp.dtype(cfg.dtype))
+        return models.decode_step(cfg, params, cache, batch, mesh)
+    return serve_step

@@ -1,0 +1,49 @@
+"""Sequence-chunked causal-LM cross-entropy.
+
+The (B, S, V) logits tensor never materializes: we scan over sequence
+chunks, computing bf16 logits + f32 log-sum-exp per chunk. With a
+model-sharded vocab the LSE reduce becomes one small all-reduce per chunk.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import softcap
+
+
+def chunked_ce_loss(cfg: ModelConfig, params: Dict, hidden: jax.Array,
+                    labels: jax.Array, mask: jax.Array = None) -> jax.Array:
+    """hidden: (B,S,d); labels: (B,S) int32 (-1 = ignore)."""
+    b, s, d = hidden.shape
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    c = min(cfg.loss_chunk, s)
+    assert s % c == 0
+    n = s // c
+    hc = hidden.reshape(b, n, c, d).swapaxes(0, 1)          # (n,b,c,d)
+    lc = labels.reshape(b, n, c).swapaxes(0, 1)
+    if mask is None:
+        mask = (labels >= 0)
+    mc = mask.reshape(b, n, c).swapaxes(0, 1)
+
+    def chunk(carry, inp):
+        tot, cnt = carry
+        h, lab, m = inp
+        logits = jnp.einsum("bcd,dv->bcv", h, head.astype(h.dtype))
+        logits = softcap(logits, cfg.logit_softcap).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lab, 0)[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        return (tot + jnp.sum(nll), cnt + jnp.sum(m)), None
+
+    # Remat the chunk body: otherwise backward saves every chunk's logits,
+    # reconstituting the full (B,S,V) tensor the chunking exists to avoid.
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(chunk),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc, mc.astype(jnp.float32)))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,100 @@
+"""Attention correctness: chunked/local/decode variants vs dense softmax
+oracles, with hypothesis sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.data.specs import reduced_config
+from repro.models import attention as attn
+
+
+def _dense_ref(q, k, v, causal=True, window=None):
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    g = h // k.shape[2]
+    k = np.repeat(np.asarray(k, np.float32), g, axis=2)
+    v = np.repeat(np.asarray(v, np.float32), g, axis=2)
+    q = np.asarray(q, np.float32)
+    s = np.einsum("bqhk,bvhk->bhqv", q, k) / np.sqrt(hd)
+    qpos = np.arange(sq)[:, None]
+    kpos = np.arange(skv)[None, :]
+    mask = np.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = np.where(mask[None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bhqv,bvhk->bqhk", p, v)
+
+
+def _cfg(chunk=32):
+    return reduced_config(get_config("olmo-1b")).replace(
+        attn_chunk_q=chunk, attn_chunk_kv=chunk)
+
+
+@pytest.mark.parametrize("s,h,hkv", [(64, 4, 4), (128, 4, 2), (64, 4, 1)])
+def test_chunked_matches_dense(s, h, hkv):
+    cfg = _cfg()
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, s, h, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, s, hkv, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, s, hkv, 16)), jnp.float32)
+    out = attn.chunked_attention(cfg, q, k, v, causal=True)
+    ref = _dense_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(nq=st.sampled_from([1, 2, 4]), ckv=st.sampled_from([16, 32, 64]),
+       seed=st.integers(0, 50))
+def test_chunked_property(nq, ckv, seed):
+    s = 64
+    cfg = _cfg().replace(attn_chunk_q=s // nq, attn_chunk_kv=ckv)
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, s, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, s, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, s, 2, 8)), jnp.float32)
+    out = attn.chunked_attention(cfg, q, k, v, causal=True)
+    ref = _dense_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=3e-4, atol=3e-4)
+
+
+def test_local_attention_band():
+    cfg = _cfg()
+    w = 32
+    s = 128
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, s, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, s, 1, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, s, 1, 8)), jnp.float32)
+    out = attn.local_attention(cfg, q, k, v, window=w)
+    ref = _dense_ref(q, k, v, causal=True, window=w)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_dense_row():
+    """Decode attention at position t == row t of dense attention."""
+    cfg = _cfg()
+    s, h, hkv, hd = 32, 4, 2, 8
+    rng = np.random.default_rng(2)
+    q_all = jnp.asarray(rng.normal(size=(1, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, s, hkv, hd)), jnp.float32)
+    ref = _dense_ref(q_all, k, v, causal=True)
+    for t in (0, 7, 31):
+        out = attn.decode_attention(cfg, q_all[:, t:t + 1], k, v,
+                                    jnp.asarray(t + 1))
+        np.testing.assert_allclose(np.asarray(out)[:, 0], ref[:, t],
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_softcap_applied():
+    from repro.models.layers import softcap
+    x = jnp.asarray([-100.0, 0.0, 100.0])
+    y = np.asarray(softcap(x, 30.0))
+    assert abs(y[0] + 30) < 0.1 and abs(y[2] - 30) < 0.1 and y[1] == 0

@@ -1,0 +1,111 @@
+"""Checkpoint/restart: atomicity, retention, resume-equivalence, hedged
+data pipeline, end-to-end driver."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.checkpoint.manager import latest_step
+from repro.data.pipeline import BatchIterator, DataConfig, HedgedReader, TokenShardSource
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.normal(size=(16, 8)), jnp.float32),
+                   "b": jnp.asarray(rng.normal(size=(8,)), jnp.bfloat16)},
+        "opt": {"m": jnp.zeros((16, 8)), "step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_save_load_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 5, tree)
+    abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                            tree)
+    restored, manifest = load_checkpoint(str(tmp_path), abstract)
+    assert manifest["step"] == 5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, tree)
+    # simulate a crash mid-write of step 3: directory without manifest
+    broken = tmp_path / "step_000000003"
+    broken.mkdir()
+    (broken / "params.w.0.zst").write_bytes(b"garbage")
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_retention_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_000000003", "step_000000004"]
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=3)
+    mgr.save(11, _tree(), blocking=False)
+    mgr.wait()
+    assert mgr.latest() == 11
+
+
+def test_elastic_restore_dtype_cast(tmp_path):
+    """Restore into a different param dtype (bf16 low-mem recipe)."""
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 1, tree)
+    abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16),
+                            tree)
+    restored, _ = load_checkpoint(str(tmp_path), abstract)
+    for leaf in jax.tree.leaves(restored):
+        assert leaf.dtype == jnp.bfloat16
+
+
+def test_data_determinism_and_seek():
+    cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=2, seed=3)
+    it1 = BatchIterator(cfg)
+    batches = [next(it1) for _ in range(4)]
+    it2 = BatchIterator(cfg)
+    it2.seek(2)                      # restart-from-checkpoint replay
+    b2 = next(it2)
+    np.testing.assert_array_equal(batches[2]["tokens"], b2["tokens"])
+
+
+def test_hedged_reader_mitigates_stragglers():
+    cfg = DataConfig(shard_size=1024, reader_latency_s=0.002,
+                     straggler_prob=0.5, hedge_after_s=0.01, seed=1)
+    src = TokenShardSource(cfg)
+    hedged = HedgedReader(src)
+    for i in range(8):
+        a = hedged.read(i)
+        b = np.random.default_rng((cfg.seed, i)).integers(
+            0, cfg.vocab_size, cfg.shard_size, dtype=np.int32)
+        np.testing.assert_array_equal(a, b)   # idempotent: same data
+    assert hedged.metrics["hedged"] >= 1
+
+
+def test_train_driver_resume_equivalence(tmp_path):
+    """Train 6 steps straight vs 3 + crash + resume 3: identical loss."""
+    from repro.launch.train import train
+    d1 = str(tmp_path / "a")
+    r_full = train("olmo-1b", 6, ckpt_dir=d1, ckpt_every=100,  # no mid ckpt
+                   log_every=0, monitor=False, global_batch=2, seq_len=64)
+    d2 = str(tmp_path / "b")
+    train("olmo-1b", 6, ckpt_dir=d2, ckpt_every=3, log_every=0,
+          monitor=False, global_batch=2, seq_len=64, stop_after=3)
+    r_resumed = train("olmo-1b", 6, ckpt_dir=d2, ckpt_every=3, log_every=0,
+                      monitor=False, global_batch=2, seq_len=64)
+    np.testing.assert_allclose(r_full["final_loss"],
+                               r_resumed["final_loss"], rtol=1e-4)

@@ -1,0 +1,62 @@
+"""Web-interface analogue: templates, top-K views, policy reports."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import snapshot as snap
+from repro.core.dashboard import (principal_summary, render_dashboard,
+                                  scheduled_report, top_storage_view)
+from repro.core.index import AggregateIndex, PrimaryIndex
+from repro.core.metadata import synth_filesystem
+from repro.core.query import QueryEngine
+from repro.core.sketches.ddsketch import DDSketchConfig
+
+PCFG = snap.PipelineConfig(
+    n_users=16, n_groups=8, n_dirs=40,
+    sketch=DDSketchConfig(alpha=0.05, n_buckets=512, offset=32))
+
+
+def _build():
+    fs = synth_filesystem(3000, n_users=16, n_groups=8, seed=2)
+    primary = PrimaryIndex()
+    primary.ingest_table(fs, version=1)
+    rows_np, valid = snap.pad_rows(snap.preprocess(fs, PCFG), 256)
+    state = snap.aggregate_local(
+        PCFG, {k: jnp.asarray(v) for k, v in rows_np.items()},
+        jnp.asarray(valid))
+    agg = AggregateIndex()
+    names = ([f"user:{i}" for i in range(16)]
+             + [f"group:{i}" for i in range(8)]
+             + [f"dir:{i}" for i in range(40)])
+    agg.from_sketch_state(PCFG.sketch, state, names)
+    return fs, primary, agg
+
+
+def test_dashboard_renders():
+    fs, primary, agg = _build()
+    text = render_dashboard(primary, agg)
+    assert "ICICLE DASHBOARD" in text
+    assert "top" in text and "user:" in text and "files" in text
+
+
+def test_summary_template_fields():
+    _, _, agg = _build()
+    s = principal_summary(agg, "user:1")
+    assert "storage:" in s and "p99" in s and "files:" in s
+    assert principal_summary(agg, "user:9999").endswith("no records")
+
+
+def test_top_view_sorted():
+    _, _, agg = _build()
+    view = top_storage_view(agg, k=5)
+    lines = [l for l in view.splitlines()[1:] if l.strip()]
+    assert len(lines) == 5
+
+
+def test_scheduled_report_counts():
+    fs, primary, agg = _build()
+    q = QueryEngine(primary, agg)
+    rep = scheduled_report(q, active_uids=list(range(8)))
+    assert set(rep["counts"]) == {"past_retention", "world_writable",
+                                  "large_cold", "orphaned"}
+    # world-writable list must match the primary-index predicate
+    assert rep["counts"]["world_writable"] == len(q.world_writable())

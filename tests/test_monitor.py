@@ -1,0 +1,149 @@
+"""Event-reduction + monitor semantics vs a naive Python replay oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import events as ev
+from repro.core import hierarchy as hi
+from repro.core import reduction
+from repro.core.fsmonitor_baseline import FSMonitorBaseline
+from repro.core.monitor import Monitor, MonitorConfig
+
+
+def _replay_oracle(batches):
+    """Naive per-event replay: final (exists, parent, name) maps."""
+    parent, name, exists, is_dir = {}, {}, {}, {}
+    for b in batches:
+        for i in range(len(b["fid"])):
+            et, fid = int(b["etype"][i]), int(b["fid"][i])
+            pf, npf = int(b["parent_fid"][i]), int(b["new_parent_fid"][i])
+            nh = int(b["name_hash"][i])
+            if et in (ev.E_CREAT, ev.E_MKDIR):
+                parent[fid] = pf
+                if nh:
+                    name[fid] = nh
+                exists[fid] = True
+                is_dir[fid] = et == ev.E_MKDIR
+            elif et in (ev.E_UNLNK, ev.E_RMDIR):
+                exists[fid] = False
+            elif et == ev.E_RENME:
+                if npf >= 0:
+                    parent[fid] = npf
+                if nh:
+                    name[fid] = nh
+                exists.setdefault(fid, True)
+            elif et in (ev.E_SATTR, ev.E_CLOSE, ev.E_WRITE):
+                exists.setdefault(fid, True)
+    return parent, name, exists
+
+
+def _run_monitor(stream, **cfg_kw):
+    cfg = MonitorConfig(max_fids=4096, batch_size=256, **cfg_kw)
+    mon = Monitor(cfg)
+    batches = []
+    while len(stream):
+        b = stream.take(cfg.batch_size)
+        batches.append({k: v.copy() for k, v in b.items()})
+        mon.process(b)
+    return mon, batches
+
+
+@pytest.mark.parametrize("workload,n", [("mixed", 600), ("eval_out", 60),
+                                        ("eval_perf", 80)])
+def test_monitor_state_matches_replay(workload, n):
+    s = ev.EventStream(start_fid=1)
+    if workload == "mixed":
+        ev.mixed_workload(s, n, root_fid=0, seed=3)
+    elif workload == "eval_out":
+        ev.eval_out_workload(s, n, root_fid=0)
+    else:
+        ev.eval_perf_workload(s, n, root_fid=0)
+
+    mon, batches = _run_monitor(s)
+    parent, name, exists = _replay_oracle(batches)
+
+    st = mon.state
+    for fid, ex in exists.items():
+        assert bool(st["exists"][fid]) == ex, (workload, fid)
+        if ex and fid in parent and parent[fid] >= 0:
+            assert int(st["parent"][fid]) == parent[fid], fid
+
+
+def test_cancellation_reduces_event_count():
+    """eval_perf create-delete cycles: reduction should cancel most pairs."""
+    s = ev.EventStream(start_fid=1)
+    ev.eval_perf_workload(s, 200)
+    mon, _ = _run_monitor(s, reduce=True)
+    assert mon.metrics["cancelled"] >= 190          # nearly every iteration
+    # final state: no files left
+    assert int(jnp.sum(mon.state["exists"])) == 0
+
+
+def test_rename_propagates_to_descendants():
+    """mv of a directory must change every descendant's path hash."""
+    s = ev.EventStream(start_fid=1)
+    d1, d2, d3 = s.alloc_fid(), s.alloc_fid(), s.alloc_fid()
+    f1 = s.alloc_fid()
+    s.emit(ev.E_MKDIR, d1, 0, name_hash=11, is_dir=1)
+    s.emit(ev.E_MKDIR, d2, d1, name_hash=22, is_dir=1)   # d1/d2
+    s.emit(ev.E_MKDIR, d3, 0, name_hash=33, is_dir=1)    # sibling
+    s.emit(ev.E_CREAT, f1, d2, name_hash=44)             # d1/d2/f1
+    mon, _ = _run_monitor(s)
+    h_before = np.asarray(mon.state["path_hash"]).copy()
+
+    s2 = ev.EventStream(start_fid=100)
+    s2.emit(ev.E_RENME, d2, d1, d3, is_dir=1, name_hash=22)  # mv d1/d2 d3/d2
+    while len(s2):
+        mon.process(s2.take(256))
+    h_after = np.asarray(mon.state["path_hash"])
+    assert h_after[d2] != h_before[d2]
+    assert h_after[f1] != h_before[f1]          # descendant re-pathed
+    assert h_after[d1] == h_before[d1]          # non-descendant untouched
+
+
+def test_open_filtering():
+    s = ev.EventStream(start_fid=1)
+    f = s.alloc_fid()
+    s.emit(ev.E_CREAT, f, 0, name_hash=5)
+    for _ in range(50):
+        s.emit(ev.E_OPEN, f, 0)
+    mon, _ = _run_monitor(s, filter_opens=True)
+    assert mon.metrics["updates"] == 1
+
+
+def test_fsmonitor_baseline_consistency():
+    """Baseline resolves the same live set (sanity, not perf)."""
+    s = ev.EventStream(start_fid=1)
+    ev.mixed_workload(s, 300, seed=9)
+    base = FSMonitorBaseline()
+    n = 0
+    while len(s):
+        b = s.take(256)
+        n += len(b["fid"])
+        base.process(b)
+    assert base.metrics["events_in"] == n
+    assert base.metrics["fid2path_calls"] > 0
+
+
+def test_hierarchy_path_hash_matches_host():
+    """Device pointer-jumping hash == host polynomial reference."""
+    parent = jnp.asarray(np.array([-1, 0, 1, 1, 3, 0], np.int32))
+    names = np.array([0, 10, 20, 30, 40, 50], np.uint32)
+    got = np.asarray(hi.path_hash_all(parent, jnp.asarray(names)))
+
+    P = 16777619
+
+    def host_hash(i):
+        chain = []
+        v = i
+        while v >= 0:
+            chain.append(int(names[v]))
+            v = int(parent[v])
+        h = 0
+        for nm in reversed(chain):
+            h = (h * P + nm) & 0xFFFFFFFF
+        return h
+
+    for i in range(6):
+        assert got[i] == host_hash(i), i
