@@ -17,10 +17,8 @@ Workloads: eval_out and eval_perf (paper §V-B2). Validated claims:
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
-import numpy as np
 
 from repro.core import events as ev
 from repro.core.fsmonitor_baseline import FSMonitorBaseline

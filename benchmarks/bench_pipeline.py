@@ -22,8 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import snapshot as snap
-from repro.core.index import AggregateIndex, PrimaryIndex
-from repro.core.metadata import files_only, synth_filesystem
+from repro.core.metadata import synth_filesystem
 from repro.core.sketches.ddsketch import DDSketchConfig
 
 FS = {

@@ -5,7 +5,7 @@ from __future__ import annotations
 import os
 from typing import List
 
-from repro.analysis.roofline import fmt_markdown, load_records, table
+from repro.analysis.roofline import load_records, table
 
 RESULTS = [os.path.join(os.path.dirname(__file__), "..", "results", p)
            for p in ("dryrun.jsonl", "dryrun_icicle2.jsonl")]

@@ -9,7 +9,6 @@ import tempfile
 
 sys.path.insert(0, "src")
 
-import jax.numpy as jnp
 
 from repro.launch.train import train
 

@@ -5,10 +5,10 @@ from __future__ import annotations
 
 import re
 from collections import defaultdict
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
-from repro.analysis.hlocost import (_COMP_START_RE, _TRIP_RE, _CALLEE_RE,
-                                    _collective_cost, parse_computations)
+from repro.analysis.hlocost import (_TRIP_RE, _CALLEE_RE, _collective_cost,
+                                     parse_computations)
 
 
 def collective_breakdown(hlo: str, top: int = 15) -> List[Dict]:

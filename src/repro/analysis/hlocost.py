@@ -17,7 +17,6 @@ All numbers are PER DEVICE (the module is the SPMD-partitioned program).
 """
 from __future__ import annotations
 
-import math
 import re
 from collections import defaultdict
 from dataclasses import dataclass, field

@@ -30,13 +30,13 @@ import re
 import shutil
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+from repro.compat import zstd
 
 
 def _flatten(tree) -> Dict[str, Any]:

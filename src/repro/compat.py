@@ -1,0 +1,64 @@
+"""Version/environment-robust dependency shims.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to the
+top-level ``jax`` namespace; installed JAX versions straddle the move.
+Import it from here everywhere (DESIGN.md §2) so the repo runs on both.
+
+``zstd`` is optional: segment files fall back to stdlib zlib with the
+same two-method Compressor/Decompressor surface. The container byte
+format differs between the two backends, but segment files are
+machine-local (crash recovery, not interchange), so self-consistency is
+all that is required.
+"""
+from __future__ import annotations
+
+import zlib
+
+import jax
+
+try:
+    shard_map = jax.shard_map           # jax >= 0.6
+except AttributeError:                  # pragma: no cover - version dependent
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+        """Experimental-era shard_map spelled with the modern signature
+        (``check_vma`` was named ``check_rep`` before the graduation)."""
+        return _shard_map_exp(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma, **kw)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a one-element list of dicts on
+    older JAX and a plain dict on newer; normalize to a dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+class _ZlibCompressor:
+    def __init__(self, level: int = 3):
+        self.level = level
+
+    def compress(self, data: bytes) -> bytes:
+        return zlib.compress(data, self.level)
+
+
+class _ZlibDecompressor:
+    def decompress(self, data: bytes) -> bytes:
+        return zlib.decompress(data)
+
+
+class _ZlibZstdModule:
+    """Minimal stand-in for the ``zstandard`` module."""
+    ZstdCompressor = _ZlibCompressor
+    ZstdDecompressor = _ZlibDecompressor
+
+
+try:  # pragma: no cover - environment dependent
+    import zstandard as zstd  # noqa: F401
+except ImportError:  # pragma: no cover - environment dependent
+    zstd = _ZlibZstdModule()
+
+__all__ = ["shard_map", "zstd", "cost_analysis"]

@@ -7,7 +7,7 @@ is consumed by exactly one model-family builder in ``repro.models``.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------

@@ -9,9 +9,8 @@ records, top-K usage views, and file-list reports for policy enforcement.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
-import numpy as np
 
 from repro.core.index import AggregateIndex, PrimaryIndex
 from repro.core.query import QueryEngine

@@ -1,0 +1,713 @@
+"""Event-based ingestion into the dual index (paper §IV-B; DESIGN.md §6).
+
+The missing half of the ingestion story: snapshot.py bulk-loads a scan,
+this module keeps both indexes synchronized from a *changelog event
+stream* (Lustre MDT changelog / GPFS watch analogue, events.py), so the
+indexed view tracks the file system in real time instead of decaying
+until the next scan.
+
+Pipeline per applied batch, mirroring the paper's Flink ingest job:
+
+1. **Coalesce** (paper §IV-B2 rule 1+2, host/numpy): sort by (fid, seq),
+   keep the last event per fid as its representative, annihilate
+   created-then-deleted fids. All segment facts (last parent, last stat,
+   last name) are computed with vectorized last-write-wins scatters — no
+   per-event Python loop.
+2. **State manager** (paper §IV-B3): fold surviving facts into host
+   fid->(parent, name, stat) tables; directory renames re-path every
+   live descendant (tombstone at the old subject, upsert at the new one)
+   — the paper's rename override.
+3. **Primary index**: one vectorized ``upsert_batch`` + ``delete_batch``
+   per applied batch (batched slot assignment; columnar scatters).
+4. **Aggregate index**: grouped per-principal updates on device — object
+   counts through the ``segstats`` kernel, attribute sketches through the
+   grouped-DDSketch kernel (``use_kernel=True``) or their jnp references
+   — then republish only the touched principals.
+
+Consistency modes (paper's tunable consistency/latency/freshness knobs):
+
+- ``eager``: every ``ingest()`` call applies immediately. Maximum
+  freshness, one device dispatch per call.
+- ``buffered``: events accumulate and apply when ``max_buffer_events``
+  or the ``freshness_window`` wall-clock deadline is hit (size/time
+  batching exactly like the paper's 10 MB / 5 s ingest batcher).
+  Maximum throughput; queries may trail the stream by up to the window.
+
+Snapshot -> event handoff: events address objects by fid, the snapshot
+index by path. Bootstrap the ingestor with ``register_tree`` (the
+scanner's fid -> (parent, name) map) so changelog events on pre-scan
+files resolve to the subjects the snapshot loaded; events on unknown
+fids fall back to ``#fid`` subjects and are counted in
+``metrics["unresolved"]``.
+
+Either way every reader can ask for the **watermark**: the highest
+changelog seq folded into the indexes, the number of buffered-but-unapplied
+events, and the staleness clock. QueryEngine surfaces it next to query
+results (DESIGN.md §6.3).
+
+What a reader observes mid-ingest: the primary index is updated between
+``ingest()`` calls only; within one applied batch, upserts land before
+tombstones, and aggregate summaries republish after the primary columns —
+so a reader interleaved with an apply can see a subject whose aggregate
+summary is one batch older (per-key eventual consistency). Sketch
+observations are recorded once per newly-seen subject; attribute updates
+and deletes reach the aggregate quantiles at the next snapshot rebuild
+(bounded-staleness trade-off, DESIGN.md §6.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import events as ev
+from repro.core import metadata as md
+from repro.core import snapshot as snap
+from repro.core.index import (AggregateIndex, PrimaryIndex, bucket_pow2,
+                              pad_1d)
+from repro.core.sketches import ddsketch as dds
+
+MODES = ("eager", "buffered")
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestConfig:
+    """Knobs for the consistency/latency/freshness trade (paper §V-C)."""
+
+    mode: str = "eager"              # "eager" | "buffered"
+    freshness_window: float = 5.0    # buffered: max seconds before an apply
+    max_buffer_events: int = 8192    # buffered: size trigger
+    pad_to: int = 1024               # pad device batches (stable jit shapes)
+    use_kernel: bool = False         # Pallas segstats/ddsketch kernels
+    filter_opens: bool = True        # drop OPEN events before coalescing
+    update_aggregates: bool = True   # maintain the aggregate index too
+
+    def __post_init__(self):
+        assert self.mode in MODES, self.mode
+
+
+@dataclasses.dataclass
+class Watermark:
+    """Freshness metadata readers attach to query results (DESIGN.md §6.3).
+
+    ``applied_seq`` is the highest changelog sequence number whose effect
+    is visible in both indexes; everything at or below it is readable.
+    ``pending`` counts buffered events not yet applied (always 0 in eager
+    mode). ``last_apply_time`` is on the ingestor's clock (monotonic by
+    default) so staleness = clock() - last_apply_time.
+    """
+
+    applied_seq: int = 0
+    pending: int = 0
+    last_apply_time: float = 0.0
+    applied_batches: int = 0
+
+
+# ---------------------------------------------------------------------------
+# device steps (jitted once per (config, padded-shape))
+# ---------------------------------------------------------------------------
+
+def _fold_sketch(scfg, state, vals, pids, mask, update_grouped):
+    """state (P, A, NB); vals (A, N); pids/mask (N,): per-attribute
+    grouped update, generic over the update implementation."""
+    n_principals = state["count"].shape[0]
+    for ai in range(vals.shape[0]):
+        sub = jax.tree.map(lambda s: s[:, ai], state)
+        sub = update_grouped(scfg, sub, vals[ai], pids, n_principals,
+                             mask=mask)
+        state = jax.tree.map(lambda s, ns: s.at[:, ai].set(ns), state, sub)
+    return state
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _sketch_apply_ref(scfg: dds.DDSketchConfig, state, vals, pids, mask):
+    return _fold_sketch(scfg, state, vals, pids, mask, dds.update_grouped)
+
+
+def _sketch_apply_kernel(scfg, state, vals, pids, mask):
+    from repro.kernels.ddsketch import ops as dd_ops
+    return _fold_sketch(scfg, state, vals, pids, mask,
+                        dd_ops.update_grouped)
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def _count_apply_ref(pids, sids, weights, n_principals, n_shards):
+    counts = jnp.zeros((n_principals, n_shards), jnp.float32)
+    return counts.at[pids, sids].add(weights)
+
+
+# shared with AggregateIndex publication: one bucketing rule, one shape
+# universe (index.bucket_pow2 / index.pad_1d)
+_bucket = bucket_pow2
+_pad = pad_1d
+
+
+class EventIngestor:
+    """Consumes changelog event batches, keeps PrimaryIndex + AggregateIndex
+    synchronized, and exports a freshness watermark (paper §IV-B).
+
+    Versioning: primary-index versions ARE changelog sequence numbers —
+    snapshots and events share one logical clock (give ``ingest_table`` the
+    changelog seq at scan time as its version), which is what makes replay
+    of any event suffix idempotent (paper §IV-A1).
+    """
+
+    def __init__(self, cfg: IngestConfig, pcfg: snap.PipelineConfig,
+                 primary: PrimaryIndex, aggregate: AggregateIndex,
+                 names: Optional[Dict[int, str]] = None,
+                 principal_names: Optional[Sequence[str]] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.cfg = cfg
+        self.pcfg = pcfg
+        self.primary = primary
+        self.aggregate = aggregate
+        self.clock = clock
+        self.watermark = Watermark(last_apply_time=clock())
+        self.metrics = {"events_in": 0, "applied": 0, "upserts": 0,
+                        "tombstones": 0, "cancelled": 0, "repathed": 0,
+                        "applies": 0, "sketch_rows": 0, "unresolved": 0}
+        # host state-manager tables (fid-keyed)
+        self._name: Dict[int, str] = dict(names or {})
+        self._parent: Dict[int, int] = {}
+        self._children: Dict[int, set] = {}
+        self._stat: Dict[int, Dict] = {}
+        self._is_dir: Dict[int, bool] = {}
+        # device aggregate operator state
+        self._sketch_state = dds.init(
+            pcfg.sketch, (pcfg.n_principals, len(snap.ATTRS)))
+        self.counts = np.zeros((pcfg.n_principals, pcfg.n_shards), np.float32)
+        self._principal_names = (list(principal_names) if principal_names
+                                 else [f"user:{i}" for i in range(pcfg.n_users)]
+                                 + [f"group:{i}" for i in range(pcfg.n_groups)]
+                                 + [f"dir:{i}" for i in range(pcfg.n_dirs)])
+        # buffered mode
+        self._buffer: List[Dict[str, np.ndarray]] = []
+        self._buffered = 0
+        self._first_buffer_ts: Optional[float] = None
+
+    # -- public surface -------------------------------------------------------
+
+    def ingest(self, batch: Dict[str, np.ndarray],
+               names: Optional[Dict[int, str]] = None) -> Dict[str, int]:
+        """Feed one changelog micro-batch (events.empty_batch layout).
+
+        ``eager``: applied before this call returns — a subsequent query
+        reads every effect. ``buffered``: visible only after the size or
+        freshness trigger fires (or an explicit flush()). ``names`` merges
+        fid -> path-component bindings (EventStream.names side table).
+        """
+        if names:
+            self._name.update(names)
+        n = len(batch["fid"])
+        self.metrics["events_in"] += n
+        if n == 0:
+            return {"applied": 0, "pending": self.watermark.pending}
+        if self.cfg.mode == "eager":
+            applied = self._apply([batch])
+        else:
+            self._buffer.append({k: np.asarray(v).copy()
+                                 for k, v in batch.items()})
+            self._buffered += n
+            if self._first_buffer_ts is None:
+                self._first_buffer_ts = self.clock()
+            self.watermark.pending = self._buffered
+            applied = 0
+            if (self._buffered >= self.cfg.max_buffer_events
+                    or self.clock() - self._first_buffer_ts
+                    >= self.cfg.freshness_window):
+                applied = self.flush()
+        return {"applied": applied, "pending": self.watermark.pending}
+
+    def tick(self) -> int:
+        """Time-based flush check for buffered mode (call from the driver
+        loop, like IngestBatcher.tick)."""
+        if (self._buffer and self._first_buffer_ts is not None
+                and self.clock() - self._first_buffer_ts
+                >= self.cfg.freshness_window):
+            return self.flush()
+        return 0
+
+    def flush(self) -> int:
+        """Apply everything buffered, advancing the watermark."""
+        if not self._buffer:
+            return 0
+        batches, self._buffer = self._buffer, []
+        self._buffered = 0
+        self._first_buffer_ts = None
+        return self._apply(batches)
+
+    def freshness(self) -> Dict[str, float]:
+        """The watermark readers attach to results (DESIGN.md §6.3)."""
+        return {
+            "mode": self.cfg.mode,
+            "applied_seq": self.watermark.applied_seq,
+            "pending_events": self.watermark.pending,
+            "staleness_s": max(0.0, self.clock()
+                               - self.watermark.last_apply_time),
+            "applied_batches": self.watermark.applied_batches,
+        }
+
+    # -- the apply pipeline ---------------------------------------------------
+
+    def _apply(self, batches: List[Dict[str, np.ndarray]]) -> int:
+        b = {k: np.concatenate([np.asarray(bb[k]) for bb in batches])
+             for k in batches[0]}
+        n_in = len(b["fid"])
+
+        facts = self._coalesce(b)
+        if facts is None:
+            self._advance_watermark(int(b["seq"].max()))
+            return n_in
+
+        # a fid the state manager knows as a directory stays one even when
+        # this batch's events omit the flag (e.g. a bare RENME on a dir)
+        facts["is_dir"] |= np.fromiter(
+            (self._is_dir.get(int(f), False) for f in facts["fid"]),
+            bool, len(facts["fid"]))
+
+        # rename override: snapshot OLD paths of live descendants BEFORE
+        # the fact fold moves the subtree (paper §IV-B2 rule 3)
+        renamed_dirs = facts["fid"][facts["renamed"] & facts["is_dir"]]
+        old_desc = self._live_descendant_paths(renamed_dirs)
+        # stats + subjects of to-be-deleted fids, read before the fold:
+        # the tombstone must hit the path the record is indexed under
+        # (pre-rename), and the counting decrement needs the old slots
+        dead = facts["dead"]
+        dead_fids = facts["fid"][dead]
+        pre_resolve = self._make_resolver()
+        dead_paths = [pre_resolve(int(f)) for f in dead_fids]
+        # owner of the dying record: state-manager stat, else the indexed
+        # record itself (register_tree handoff), else zeros
+        dead_prev = [self._stat.get(int(f)) or self._record_fields(p) or {}
+                     for f, p in zip(dead_fids, dead_paths)]
+        # first event for a fid the snapshot indexed (register_tree
+        # handoff): seed its stat from the record so sparse events merge
+        # onto the scanned values instead of zeros
+        for f in facts["fid"][facts["alive"] & ~facts["created"]]:
+            fi = int(f)
+            if fi not in self._stat and fi in self._parent:
+                rec = self._record_fields(pre_resolve(fi))
+                if rec:
+                    self._stat[fi] = rec
+        # FILE renames move a single subject: remember the old path now,
+        # tombstone it after the fold (dir renames go via old_desc)
+        ren_files = facts["renamed"] & ~facts["is_dir"] & facts["alive"]
+        renf_fids = facts["fid"][ren_files]
+        renf_old = [pre_resolve(int(f)) for f in renf_fids]
+        renf_seq = facts["seq"][ren_files]
+
+        self._fold_facts(facts)
+
+        # resolve live subjects AFTER the fold (paths reflect the new tree)
+        resolve = self._make_resolver()
+        up = facts["alive"] & ~facts["is_dir"]
+        up_fids = facts["fid"][up]
+        up_paths = [resolve(int(f)) for f in up_fids]
+        up_vers = facts["seq"][up]
+        # columns from the MERGED fact tables (a sparse batch inherits the
+        # fields it didn't carry from earlier events / the stored record)
+        up_stats = [self._stat.get(int(f), {}) for f in up_fids]
+        up_uid = np.array([s.get("uid", 0) for s in up_stats], np.int32)
+        up_gid = np.array([s.get("gid", 0) for s in up_stats], np.int32)
+        up_size = np.array([s.get("size", 0.0) for s in up_stats],
+                           np.float32)
+        up_mtime = np.array([s.get("mtime", 0.0) for s in up_stats],
+                            np.float32)
+
+        rename_seq = int(facts["seq"].max()) if len(facts["seq"]) else 0
+        dead_in_batch = frozenset(
+            int(f) for f in facts["fid"][facts["dead"] | facts["cancelled"]])
+        re_paths, re_fields = self._repath(old_desc, resolve, rename_seq,
+                                           dead_in_batch)
+
+        # primary index: vectorized columnar upserts + tombstones
+        fields = {
+            "path_hash": np.array([md.path_hash(p) for p in up_paths],
+                                  np.uint32),
+            "type": np.full(len(up_paths), md.TYPE_FILE, np.int32),
+            "uid": up_uid,
+            "gid": up_gid,
+            "size": up_size,
+            "mtime": up_mtime,
+            "atime": up_mtime,
+            "ctime": up_mtime,
+        }
+        new_mask = self.primary.upsert_batch(up_paths, fields, up_vers)
+        count_jobs = [(up_paths, up_uid, up_gid, +1.0, new_mask)]
+        if re_paths:
+            re_vers = np.full(len(re_paths["new"]), rename_seq, np.int64)
+            re_new = self.primary.upsert_batch(re_paths["new"], re_fields,
+                                               re_vers)
+            re_dead = self.primary.delete_batch(re_paths["old"], re_vers)
+            count_jobs.append((re_paths["new"], re_fields["uid"],
+                               re_fields["gid"], +1.0, re_new))
+            count_jobs.append((re_paths["old"], re_fields["uid"],
+                               re_fields["gid"], -1.0, re_dead))
+            self.metrics["repathed"] += len(re_paths["new"])
+        del_mask = self.primary.delete_batch(dead_paths, facts["seq"][dead])
+        if len(dead_paths):
+            uidd = np.array([s.get("uid", 0) for s in dead_prev], np.int32)
+            gidd = np.array([s.get("gid", 0) for s in dead_prev], np.int32)
+            count_jobs.append((dead_paths, uidd, gidd, -1.0, del_mask))
+        # file-rename tombstones: old subject dies at the rename's seq
+        moved = [i for i, (f, o) in enumerate(zip(renf_fids, renf_old))
+                 if resolve(int(f)) != o]
+        if moved:
+            mv_old = [renf_old[i] for i in moved]
+            mv_stats = [self._stat.get(int(renf_fids[i]))
+                        or self._record_fields(renf_old[i]) or {}
+                        for i in moved]
+            mv_dead = self.primary.delete_batch(
+                mv_old, renf_seq[moved])
+            count_jobs.append((
+                mv_old,
+                np.array([s.get("uid", 0) for s in mv_stats], np.int32),
+                np.array([s.get("gid", 0) for s in mv_stats], np.int32),
+                -1.0, mv_dead))
+            self.metrics["repathed"] += len(mv_old)
+
+        if self.cfg.update_aggregates:
+            self._apply_aggregates(count_jobs, up_paths, up_uid, up_gid,
+                                   up_size, up_mtime, new_mask)
+
+        self.metrics["applied"] += n_in
+        self.metrics["upserts"] += len(up_paths)
+        self.metrics["tombstones"] += int(del_mask.sum())
+        self.metrics["cancelled"] += int(facts["cancelled"].sum())
+        self.metrics["applies"] += 1
+        self._advance_watermark(int(b["seq"].max()))
+        return n_in
+
+    def _advance_watermark(self, seq: int) -> None:
+        self.watermark.applied_seq = max(self.watermark.applied_seq, seq)
+        self.watermark.pending = self._buffered
+        self.watermark.last_apply_time = self.clock()
+        self.watermark.applied_batches += 1
+
+    def _coalesce(self, b: Dict[str, np.ndarray]) -> Optional[Dict]:
+        """Rules 1+2 on the host: last event per fid is its representative;
+        per-fid facts via last-write-wins scatters over the (fid, seq)
+        sorted view. Returns per-UNIQUE-fid arrays."""
+        etype = b["etype"]
+        valid = np.ones(len(etype), bool)
+        if self.cfg.filter_opens:
+            valid &= etype != ev.E_OPEN
+        if not valid.any():
+            return None
+        b = {k: v[valid] for k, v in b.items()}
+        order = np.lexsort((b["seq"], b["fid"]))
+        b = {k: v[order] for k, v in b.items()}
+        fid = b["fid"]
+        etype = b["etype"]
+        uf, inv = np.unique(fid, return_inverse=True)
+        m = len(uf)
+
+        def last(values, mask=None, init=0):
+            out = np.full(m, init, np.asarray(values).dtype)
+            if mask is None:
+                out[inv] = values           # sorted by seq -> last wins
+            else:
+                out[inv[mask]] = values[mask]
+            return out
+
+        last_et = last(etype)
+        seq = last(b["seq"])
+        created = np.zeros(m, bool)
+        np.logical_or.at(created, inv,
+                         (etype == ev.E_CREAT) | (etype == ev.E_MKDIR))
+        renamed = np.zeros(m, bool)
+        np.logical_or.at(renamed, inv, etype == ev.E_RENME)
+        is_dir = np.zeros(m, bool)
+        np.logical_or.at(is_dir, inv, b["is_dir"] > 0)
+
+        parent_eff = np.where(b["new_parent_fid"] >= 0,
+                              b["new_parent_fid"], b["parent_fid"])
+        parent = last(parent_eff, parent_eff >= 0, init=-1)
+        # stat facts: stat-carrying rows win; else the last row that
+        # carried a nonzero value (Lustre events are stat-free, so e.g. an
+        # UNLNK row's zero uid must not clobber the CREAT's)
+        hs = b["has_stat"] > 0
+        any_stat = np.zeros(m, bool)
+        np.logical_or.at(any_stat, inv, hs)    # ANY row, not just the last
+
+        def any_pos(field):
+            out = np.zeros(m, bool)
+            np.logical_or.at(out, inv, b[field] > 0)
+            return out
+
+        def fact(field):
+            v = b[field]
+            return np.where(any_stat, last(v, hs), last(v, v > 0))
+
+        size = fact("size")
+        mtime = fact("mtime")
+        # ownership: stat rows may omit uid/gid (e.g. a bare WRITE), so a
+        # chown is whichever row last carried a nonzero owner
+        uid = last(b["uid"], b["uid"] > 0)
+        gid = last(b["gid"], b["gid"] > 0)
+        # which facts this batch actually carried (events are sparse: a
+        # batch with no stat/owner info must not clobber stored facts)
+        has_size = any_stat | any_pos("size")
+        has_mtime = any_stat | any_pos("mtime")
+        has_uid = any_pos("uid")
+        has_gid = any_pos("gid")
+
+        is_del = (last_et == ev.E_UNLNK) | (last_et == ev.E_RMDIR)
+        cancelled = is_del & created
+        return {
+            "fid": uf, "seq": seq, "parent": parent,
+            "size": size, "mtime": mtime, "uid": uid, "gid": gid,
+            "is_dir": is_dir, "renamed": renamed, "created": created,
+            "alive": ~is_del, "dead": is_del & ~created,
+            "cancelled": cancelled,
+            "has_stat": any_stat,
+            "has_size": has_size, "has_mtime": has_mtime,
+            "has_uid": has_uid, "has_gid": has_gid,
+        }
+
+    def _fold_facts(self, facts: Dict) -> None:
+        """Apply coalesced facts to the host fid tables (the paper's state
+        manager; dict ops only — O(unique fids))."""
+        for i, f in enumerate(facts["fid"]):
+            f = int(f)
+            if facts["dead"][i] or facts["cancelled"][i]:
+                self._stat.pop(f, None)
+                old_p = self._parent.get(f)
+                if old_p is not None:
+                    self._children.get(old_p, set()).discard(f)
+                continue
+            p = int(facts["parent"][i])
+            if p >= 0:
+                old_p = self._parent.get(f)
+                if old_p is not None and old_p != p:
+                    self._children.get(old_p, set()).discard(f)
+                self._parent[f] = p
+                self._children.setdefault(p, set()).add(f)
+            if facts["is_dir"][i]:
+                self._is_dir[f] = True
+            st = self._stat.setdefault(
+                f, {"size": 0.0, "mtime": 0.0, "uid": 0, "gid": 0})
+            if facts["has_size"][i]:
+                st["size"] = float(facts["size"][i])
+            if facts["has_mtime"][i]:
+                st["mtime"] = float(facts["mtime"][i])
+            if facts["has_uid"][i]:
+                st["uid"] = int(facts["uid"][i])
+            if facts["has_gid"][i]:
+                st["gid"] = int(facts["gid"][i])
+
+    def _make_resolver(self) -> Callable[[int], str]:
+        memo: Dict[int, str] = {}
+
+        def resolve(f: int) -> str:
+            got = memo.get(f)
+            if got is not None:
+                return got
+            name = self._name.get(f)
+            if name is None:
+                # fid never registered (e.g. scanned by a snapshot before
+                # this ingestor attached): subjects resolved through this
+                # fallback cannot match the snapshot-loaded record — count
+                # it loudly; deployments should register_tree() first
+                self.metrics["unresolved"] += 1
+                name = f"#{f}"
+            p = self._parent.get(f, -1)
+            path = ("/" + name) if p < 0 else resolve(p) + "/" + name
+            memo[f] = path
+            return path
+        return resolve
+
+    def register_tree(self, parents: Dict[int, int], names: Dict[int, str],
+                      is_dir: Optional[Dict[int, bool]] = None) -> None:
+        """Bootstrap the state manager with an existing fid -> (parent,
+        name) tree — the snapshot -> event handoff (paper §IV-B3: the
+        scanner records fids, so a changelog event on a pre-scan file
+        resolves to the same subject the snapshot indexed). Without this,
+        events for unknown fids resolve to '#fid' fallback subjects and
+        cannot touch snapshot-loaded records (metrics['unresolved'])."""
+        self._name.update(names)
+        for f, p in parents.items():
+            self._parent[f] = p
+            self._children.setdefault(p, set()).add(f)
+        for f, d in (is_dir or {}).items():
+            if d:
+                self._is_dir[f] = True
+
+    def _live_descendant_paths(self, dir_fids: np.ndarray) -> Dict[int, str]:
+        """Old subjects of every FILE under the given dirs, resolved
+        against the pre-rename tree. Includes files known only through
+        ``register_tree`` (no event-derived stat yet) — their index
+        record is the source of truth at repath time."""
+        if len(dir_fids) == 0:
+            return {}
+        resolve = self._make_resolver()
+        out: Dict[int, str] = {}
+        stack = [int(f) for f in dir_fids]
+        seen = set()
+        while stack:
+            d = stack.pop()
+            if d in seen:
+                continue
+            seen.add(d)
+            for c in self._children.get(d, ()):
+                if self._is_dir.get(c):
+                    stack.append(c)
+                else:
+                    out[c] = resolve(c)
+        return out
+
+    def _record_fields(self, path: str) -> Optional[Dict[str, float]]:
+        """Owner/stat of the indexed record at ``path`` (live or not) —
+        the fallback fact source for fids the state manager only knows
+        via register_tree."""
+        slot = self.primary._slot.get(path)
+        if slot is None:
+            return None
+        cols = self.primary.columns
+        return {k: cols[k][slot].item()
+                for k in ("uid", "gid", "size", "mtime") if k in cols}
+
+    def _repath(self, old_desc: Dict[int, str],
+                resolve: Callable[[int], str], version: int,
+                dead_in_batch: frozenset):
+        """Rename override on the index: move descendants whose subject
+        changed (old tombstone + new upsert carrying the stored stat, or
+        the indexed record's own fields for register_tree-only fids)."""
+        if not old_desc:
+            return {}, {}
+        olds, news, stats = [], [], []
+        for f, old_path in old_desc.items():
+            if f in dead_in_batch:      # deleted in this same batch
+                continue
+            st = self._stat.get(f) or self._record_fields(old_path)
+            if st is None:              # never indexed, nothing to move
+                continue
+            new_path = resolve(f)
+            if new_path == old_path:
+                continue
+            olds.append(old_path)
+            news.append(new_path)
+            stats.append(st)
+        if not news:
+            return {}, {}
+        fields = {
+            "path_hash": np.array([md.path_hash(p) for p in news], np.uint32),
+            "type": np.full(len(news), md.TYPE_FILE, np.int32),
+            "uid": np.array([s.get("uid", 0) for s in stats], np.int32),
+            "gid": np.array([s.get("gid", 0) for s in stats], np.int32),
+            "size": np.array([s.get("size", 0.0) for s in stats], np.float32),
+            "mtime": np.array([s.get("mtime", 0.0) for s in stats],
+                              np.float32),
+        }
+        return {"old": olds, "new": news}, fields
+
+    # -- aggregate pipeline (device) -----------------------------------------
+
+    def _principal_rows(self, paths: List[str],
+                        uid: np.ndarray, gid: np.ndarray):
+        """(streams, sids): principal slot streams exactly like snapshot
+        preprocessing — uid slot, gid slot, and one dir-prefix slot per
+        depth in [dir_min, dir_max] (slot = FNV hash of the ancestor dir's
+        path, computed from the resolved parent chain)."""
+        cfg = self.pcfg
+        n = len(paths)
+        uid_slot = uid.astype(np.int64) % cfg.n_users
+        gid_slot = cfg.n_users + gid.astype(np.int64) % cfg.n_groups
+        base = cfg.n_users + cfg.n_groups
+        levels = cfg.dir_max - cfg.dir_min + 1
+        dir_slots = np.full((n, levels), -1, np.int64)
+        memo: Dict[str, np.ndarray] = {}
+        for i, p in enumerate(paths):
+            dpath = p.rsplit("/", 1)[0]
+            got = memo.get(dpath)
+            if got is None:
+                comps = [c for c in dpath.split("/") if c]
+                got = np.full(levels, -1, np.int64)
+                for li, depth in enumerate(range(cfg.dir_min,
+                                                 cfg.dir_max + 1)):
+                    if depth < len(comps):
+                        anc = "/" + "/".join(comps[:depth + 1])
+                        got[li] = base + md.path_hash(anc) % cfg.n_dirs
+                memo[dpath] = got
+            dir_slots[i] = got
+        sids = np.fromiter((md.crc32_shard(p.encode(), cfg.n_shards)
+                            for p in paths), np.int64, n)
+        streams = [(uid_slot, np.ones(n, np.float32)),
+                   (gid_slot, np.ones(n, np.float32))]
+        for li in range(levels):
+            pid = dir_slots[:, li]
+            streams.append((np.maximum(pid, 0),
+                            (pid >= 0).astype(np.float32)))
+        return streams, sids
+
+    def _apply_aggregates(self, count_jobs, up_paths, up_uid, up_gid,
+                          up_size, up_mtime, new_mask) -> None:
+        """Device-side aggregate maintenance for one applied batch: counting
+        deltas (±1 per subject entering/leaving the index, including
+        rename moves between dir principals) and sketch observations for
+        newly-seen subjects, then republish touched principals."""
+        cfg = self.pcfg
+        touched: set = set()
+
+        for paths, uid, gid, sign, sel in count_jobs:
+            if not np.any(sel):
+                continue
+            paths = [p for p, s in zip(paths, sel) if s]
+            streams, sids = self._principal_rows(paths, uid[sel], gid[sel])
+            pid_cat = np.concatenate([p for p, _ in streams])
+            w_cat = np.concatenate([w for _, w in streams]) * sign
+            sid_cat = np.tile(sids, len(streams))
+            npad = _bucket(len(pid_cat), self.cfg.pad_to)
+            delta = self._count_step(
+                jnp.asarray(_pad(pid_cat, npad)),
+                jnp.asarray(_pad(sid_cat, npad)),
+                jnp.asarray(_pad(w_cat, npad)))
+            self.counts += np.asarray(delta, np.float32)
+            touched.update(np.unique(pid_cat[w_cat != 0]).tolist())
+
+        # sketch observations: once per newly-seen subject (additive-only;
+        # updates/deletes reach quantiles at the next snapshot rebuild)
+        sel = new_mask
+        if np.any(sel):
+            paths = [p for p, s in zip(up_paths, sel) if s]
+            streams, _ = self._principal_rows(paths, up_uid[sel],
+                                              up_gid[sel])
+            mt = up_mtime[sel]
+            vals = np.stack([up_size[sel],
+                             mt, mt, mt])          # size, atime, ctime, mtime
+            pid_cat = np.concatenate([p for p, _ in streams])
+            w_cat = np.concatenate([w for _, w in streams])
+            vals_cat = np.tile(vals, (1, len(streams)))
+            npad = _bucket(len(pid_cat), self.cfg.pad_to)
+            vals_p = np.stack([_pad(vals_cat[a], npad)
+                               for a in range(vals_cat.shape[0])])
+            apply_fn = (_sketch_apply_kernel if self.cfg.use_kernel
+                        else _sketch_apply_ref)
+            self._sketch_state = apply_fn(
+                cfg.sketch, self._sketch_state, jnp.asarray(vals_p),
+                jnp.asarray(_pad(pid_cat, npad).astype(np.int32)),
+                jnp.asarray(_pad(w_cat, npad)))
+            self.metrics["sketch_rows"] += int(w_cat.sum())
+            touched.update(np.unique(pid_cat[w_cat != 0]).tolist())
+
+        if touched:
+            self.aggregate.from_sketch_state(
+                cfg.sketch, self._sketch_state, self._principal_names,
+                only=sorted(int(t) for t in touched))
+
+    def _count_step(self, pids, sids, weights):
+        if self.cfg.use_kernel:
+            from repro.kernels.segstats import ops as seg_ops
+            seg = seg_ops.segstats(pids, sids, weights, weights,
+                                   self.pcfg.n_principals,
+                                   self.pcfg.n_shards)
+            return seg["counts"]
+        return _count_apply_ref(pids.astype(jnp.int32),
+                                sids.astype(jnp.int32),
+                                weights.astype(jnp.float32),
+                                self.pcfg.n_principals, self.pcfg.n_shards)

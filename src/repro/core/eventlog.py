@@ -8,13 +8,10 @@ monitor crash-recovery of unconsumed events.
 """
 from __future__ import annotations
 
-import dataclasses
-import io
-import os
-from typing import Any, Dict, Iterator, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import msgpack
-import zstandard as zstd
+from repro.compat import zstd
 
 
 class Partition:

@@ -10,8 +10,7 @@ device) so the reduction rules are data-parallel.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -35,7 +34,7 @@ EVENT_NAMES = {
 }
 
 FIELDS = ("seq", "etype", "fid", "parent_fid", "new_parent_fid", "name_hash",
-          "is_dir", "has_stat", "size", "mtime")
+          "is_dir", "has_stat", "size", "mtime", "uid", "gid")
 
 
 def empty_batch(n: int) -> Dict[str, np.ndarray]:
@@ -50,17 +49,29 @@ def empty_batch(n: int) -> Dict[str, np.ndarray]:
         "has_stat": np.zeros(n, np.int32),
         "size": np.zeros(n, np.float32),
         "mtime": np.zeros(n, np.float32),
+        "uid": np.zeros(n, np.int32),
+        "gid": np.zeros(n, np.int32),
     }
 
 
 class EventStream:
     """Append-only event source with monotone sequence numbers (one per MDT
-    / fileset)."""
+    / fileset).
+
+    Device batches carry only fixed-width columns (``name_hash``, not
+    strings); the human-readable path component of each fid rides a host
+    side table ``names`` — the analogue of the name field in a Lustre
+    changelog record, which the event-ingestion pipeline (event_ingest.py)
+    uses to materialize index subjects without a per-event ``fid2path``
+    RPC (paper §IV-B1).
+    """
 
     def __init__(self, start_fid: int = 1):
         self._events: List[Tuple] = []
         self._seq = 0
         self._next_fid = start_fid
+        self.names: Dict[int, str] = {}
+        self._fresh_names: Dict[int, str] = {}
 
     def alloc_fid(self) -> int:
         fid = self._next_fid
@@ -69,11 +80,22 @@ class EventStream:
 
     def emit(self, etype: int, fid: int, parent_fid: int = -1,
              new_parent_fid: int = -1, name_hash: int = 0, is_dir: int = 0,
-             has_stat: int = 0, size: float = 0.0, mtime: float = 0.0):
+             has_stat: int = 0, size: float = 0.0, mtime: float = 0.0,
+             uid: int = 0, gid: int = 0, name: Optional[str] = None):
         self._seq += 1
+        if name is not None:
+            self.names[fid] = name
+            self._fresh_names[fid] = name
         self._events.append((self._seq, etype, fid, parent_fid,
                              new_parent_fid, name_hash, is_dir, has_stat,
-                             size, mtime))
+                             size, mtime, uid, gid))
+
+    def take_names(self) -> Dict[int, str]:
+        """Drain name bindings added since the last call — lets a consumer
+        merge O(new) names per micro-batch instead of re-merging the full
+        table every batch (``names`` itself stays complete)."""
+        fresh, self._fresh_names = self._fresh_names, {}
+        return fresh
 
     def __len__(self) -> int:
         return len(self._events)
@@ -129,10 +151,12 @@ def eval_perf_workload(stream: EventStream, iterations: int,
 
 def filebench_workload(stream: EventStream, n_files: int, n_ops: int,
                        root_fid: int = 0, seed: int = 0,
-                       has_stat: int = 0) -> np.ndarray:
+                       has_stat: int = 0, n_users: int = 32,
+                       n_groups: int = 8) -> np.ndarray:
     """Filebench-style (§V-B3): pre-populate a tree (mean dir width 20,
     depth ~3.6), then open-read-close on random files. Returns the fid
-    array of created files."""
+    array of created files. Ownership is zipf-skewed over ``n_users``
+    (the per-user aggregation skew the paper evaluates)."""
     rng = np.random.default_rng(seed)
     dirs = [root_fid]
     depth = {root_fid: 0}
@@ -143,15 +167,19 @@ def filebench_workload(stream: EventStream, n_files: int, n_ops: int,
             parent = int(rng.choice(dirs))
             if depth[parent] < 6:
                 stream.emit(E_MKDIR, d, parent, is_dir=1,
-                            name_hash=rng.integers(1 << 31))
+                            name_hash=rng.integers(1 << 31),
+                            name=f"d{d}")
                 dirs.append(d)
                 depth[d] = depth[parent] + 1
         f = stream.alloc_fid()
         parent = int(rng.choice(dirs))
         size = float(rng.gamma(1.5, 16e3 / 1.5))
+        uid = int(rng.zipf(1.6) % n_users)
         stream.emit(E_CREAT, f, parent, name_hash=rng.integers(1 << 31),
-                    has_stat=has_stat, size=size)
-        stream.emit(E_CLOSE, f, parent, has_stat=has_stat, size=size)
+                    has_stat=has_stat, size=size, uid=uid,
+                    gid=uid % n_groups, name=f"f{f}")
+        stream.emit(E_CLOSE, f, parent, has_stat=has_stat, size=size,
+                    uid=uid, gid=uid % n_groups)
         fids[i] = f
     targets = rng.integers(0, n_files, n_ops)
     for t in targets:
@@ -162,7 +190,8 @@ def filebench_workload(stream: EventStream, n_files: int, n_ops: int,
 
 
 def mixed_workload(stream: EventStream, n_ops: int, root_fid: int = 0,
-                   seed: int = 0, rename_frac: float = 0.01) -> None:
+                   seed: int = 0, rename_frac: float = 0.01,
+                   n_users: int = 32, n_groups: int = 8) -> None:
     """Random mix including directory renames (exercises rename-override)."""
     rng = np.random.default_rng(seed)
     dirs = [root_fid]
@@ -171,8 +200,10 @@ def mixed_workload(stream: EventStream, n_ops: int, root_fid: int = 0,
         r = rng.random()
         if r < 0.30 or not files:
             f = stream.alloc_fid()
+            uid = int(rng.integers(n_users))
             stream.emit(E_CREAT, f, int(rng.choice(dirs)),
-                        name_hash=rng.integers(1 << 31))
+                        name_hash=rng.integers(1 << 31), uid=uid,
+                        gid=uid % n_groups, name=f"f{f}")
             files.append(f)
         elif r < 0.45:
             stream.emit(E_SATTR, int(rng.choice(files)))
@@ -182,7 +213,7 @@ def mixed_workload(stream: EventStream, n_ops: int, root_fid: int = 0,
         elif r < 0.60:
             d = stream.alloc_fid()
             stream.emit(E_MKDIR, d, int(rng.choice(dirs)), is_dir=1,
-                        name_hash=rng.integers(1 << 31))
+                        name_hash=rng.integers(1 << 31), name=f"d{d}")
             dirs.append(d)
         elif r < 0.60 + rename_frac and len(dirs) > 2:
             d = int(rng.choice(dirs[1:]))

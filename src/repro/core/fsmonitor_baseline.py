@@ -15,7 +15,7 @@ behaviour on Filebench (§V-B3): repeated opens on live files hit the cache.
 from __future__ import annotations
 
 import time
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

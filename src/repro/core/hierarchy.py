@@ -13,7 +13,7 @@ on all descendants falls out of one re-computation + diff — no recursion.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

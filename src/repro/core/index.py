@@ -1,23 +1,56 @@
-"""Dual metadata index (paper §III-A): primary (per-object) + aggregate
-(per-principal summaries), with version-based idempotent ingest.
+"""Dual metadata index (paper §III-A; DESIGN.md §3): primary (per-object)
++ aggregate (per-principal summaries), with version-based idempotent
+ingest.
 
 The primary index is a columnar store over MetadataTable columns plus the
 host path array; the aggregate index holds DDSketch summaries per
 principal. Both expose the record schema the paper ingests into Globus
 Search (subject / visible_to / content) so the web-interface layer and the
 benchmarks read a uniform shape.
+
+Consistency semantics (DESIGN.md §6): every mutation carries a version on
+one monotone logical clock shared by snapshot ingest and event ingest (a
+snapshot's version is the changelog sequence number at scan time). A
+record with a higher version never regresses to a lower one, so replaying
+any suffix of the change history is idempotent. Readers see the index
+*between* ingest calls only — each batch mutation is applied column-wise,
+so a reader interleaving with an ingest thread could observe a
+half-applied batch; the repo's drivers are synchronous, and the freshness
+contract queries actually rely on is the watermark exported by
+event_ingest.EventIngestor.
 """
 from __future__ import annotations
 
 import dataclasses
-import re
-import time
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metadata as md
 from repro.core.sketches import ddsketch as dds
+
+
+def bucket_pow2(n: int, floor: int = 1) -> int:
+    """Power-of-two padded size >= n: callers that pad device batches to
+    this keep the jit shape universe at O(log batch) instead of one
+    compile per batch size."""
+    return max(floor, 1 << max(0, int(n - 1).bit_length()))
+
+
+def pad_1d(a: np.ndarray, n: int, fill=0) -> np.ndarray:
+    if len(a) >= n:
+        return a
+    return np.concatenate([a, np.full(n - len(a), fill, a.dtype)])
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _summary_jit(cfg, state, qs, sel=None):
+    if sel is not None:
+        state = jax.tree.map(lambda s: s[sel], state)
+    return dds.summary(cfg, state, qs)
 
 
 @dataclasses.dataclass
@@ -100,28 +133,139 @@ class PrimaryIndex:
         return new
 
     def upsert(self, path: str, fields: Dict, version: int) -> None:
+        """Single-record upsert (paper §IV-B3). Applied only when
+        ``version >= `` the record's stored version; otherwise a no-op
+        (stale event). Prefer ``upsert_batch`` on the hot path."""
         self._put(path, fields, version)
 
     def delete(self, path: str, version: int) -> None:
+        """Single-record tombstone: the slot stays allocated (columns keep
+        their last values) but the record leaves every live() view. A
+        later upsert with ``version >=`` the tombstone's resurrects the
+        slot."""
         slot = self._slot.get(path)
         if slot is not None and version >= self.version[slot]:
             self.alive[slot] = False
             self.version[slot] = version
 
+    # -- batched event-path mutations (paper §IV-B3; DESIGN.md §6) ------------
+
+    def upsert_batch(self, paths: Sequence[str], fields: Dict[str, np.ndarray],
+                     versions: np.ndarray) -> np.ndarray:
+        """Vectorized columnar upsert for a coalesced event batch.
+
+        ``fields`` maps column name -> (N,) array; only the given columns
+        are written (missing columns of new records stay zero until a
+        snapshot or a richer event fills them — the paper's event records
+        are sparser than its snapshot rows). ``versions`` is (N,) int64 on
+        the shared logical clock (changelog seq of each surviving
+        representative). Rows whose version is older than the stored
+        record are dropped (idempotent replay). Duplicate paths within a
+        batch must be ordered by seq ascending — numpy scatter gives
+        last-occurrence-wins, matching changelog order.
+
+        Slot assignment is one dict sweep (the only host loop, as in
+        ``ingest_table``); every column write is a fancy-index scatter.
+        Returns a (N,) bool mask marking one row per subject that
+        ENTERED the live set — a brand-new slot or a tombstoned slot
+        resurrected by this batch — i.e. the counting pipeline's +1
+        delta (a recreate after a delete must count again).
+        """
+        n = len(paths)
+        if n == 0:
+            return np.zeros(0, bool)
+        versions = np.broadcast_to(np.asarray(versions, np.int64), (n,))
+        if not self.columns:
+            self.columns = {k: np.zeros(0, np.asarray(v).dtype)
+                            for k, v in fields.items()}
+        for k, v in fields.items():
+            if k not in self.columns:
+                self.columns[k] = np.zeros(len(self.paths),
+                                           np.asarray(v).dtype)
+        slots = np.empty(n, np.int64)
+        new_mask = np.zeros(n, bool)
+        for i, p in enumerate(paths):     # slot assignment (dict sweep)
+            s = self._slot.get(p)
+            if s is None:
+                s = len(self._slot)
+                self._slot[p] = s
+                new_mask[i] = True
+            slots[i] = s
+        self._ensure_capacity(max(0, len(self._slot) - len(self.paths)))
+        self.paths[slots] = np.asarray(paths, object)
+        prev_alive = self.alive[slots] & ~new_mask   # pre-batch liveness
+        ok = versions >= self.version[slots]
+        sel = slots[ok]
+        for k, v in fields.items():
+            self.columns[k][sel] = np.asarray(v)[ok]
+        self.version[sel] = versions[ok]
+        self.alive[sel] = True
+        entered = ok & ~prev_alive
+        # one +1 per slot even if the subject repeats within the batch
+        idx = np.nonzero(entered)[0]
+        out = np.zeros(n, bool)
+        if len(idx):
+            _, first_pos = np.unique(slots[idx], return_index=True)
+            out[idx[first_pos]] = True
+        return out
+
+    def delete_batch(self, paths: Sequence[str],
+                     versions: np.ndarray) -> np.ndarray:
+        """Vectorized tombstones. Unknown subjects are ignored (a delete
+        for a record the index never saw — e.g. created and removed
+        between snapshots with OPEN filtering on). Returns a (N,) bool
+        mask of rows that transitioned live -> dead (the counting
+        pipeline's -1 delta)."""
+        n = len(paths)
+        if n == 0 or not self._slot:      # nothing indexed yet
+            return np.zeros(n, bool)
+        versions = np.broadcast_to(np.asarray(versions, np.int64), (n,))
+        slots = np.fromiter((self._slot.get(p, -1) for p in paths),
+                            np.int64, n)
+        known = slots >= 0
+        s = np.clip(slots, 0, None)
+        ok = known & (versions >= self.version[s])
+        was_alive = self.alive[s] & ok
+        sel = s[ok]
+        self.alive[sel] = False
+        self.version[sel] = versions[ok]
+        return was_alive
+
     def invalidate_older(self, version: int) -> int:
         """Records from snapshots older than `version` are dead — this is
-        how periodic re-ingest detects deletions."""
+        how periodic re-ingest detects deletions. The tombstones carry
+        `version` (the snapshot asserted absence at that point of the
+        logical clock), so replaying a pre-snapshot event suffix cannot
+        resurrect them."""
         n = len(self._slot)
         stale = self.alive[:n] & (self.version[:n] < version)
         self.alive[:n] &= ~stale
+        self.version[:n][stale] = version
         return int(stale.sum())
 
     # -- views ----------------------------------------------------------------
+
+    #: the Table-II columns every reader may assume exist; missing ones
+    #: (sparse event records, empty index) materialize as zeros
+    STANDARD_COLUMNS = {
+        "path_hash": np.uint32, "parent": np.int32, "depth": np.int32,
+        "type": np.int32, "mode": np.int32, "uid": np.int32,
+        "gid": np.int32, "size": np.float32, "atime": np.float32,
+        "ctime": np.float32, "mtime": np.float32, "fileset": np.int32,
+    }
+
     def live(self) -> Dict[str, np.ndarray]:
+        """Snapshot view of all live records, schema-stable: queries can
+        rely on every STANDARD_COLUMNS key being present (zeros when no
+        ingest has populated it — e.g. events carry no mode bits)."""
         n = len(self._slot)
         mask = self.alive[:n]
         out = {k: v[:n][mask] for k, v in self.columns.items()}
         out["path"] = self.paths[:n][mask]
+        m = int(mask.sum())
+        for k, dt in self.STANDARD_COLUMNS.items():
+            if k not in out:
+                out[k] = np.zeros(m, dt)
         return out
 
     def __len__(self) -> int:
@@ -130,8 +274,14 @@ class PrimaryIndex:
 
 @dataclasses.dataclass
 class AggregateIndex:
-    """Per-principal summaries (Table III). Stored as plain dict records —
-    under 1 GB even for billion-object systems (paper Table VI)."""
+    """Per-principal summaries (Table III; DESIGN.md §3). Stored as plain
+    dict records — under 1 GB even for billion-object systems (paper
+    Table VI).
+
+    Consistency: records are published whole per principal — a reader
+    never sees a half-written summary, but different principals may
+    reflect different watermarks while an event batch is being folded in
+    (the paper's per-key eventual consistency)."""
 
     records: Dict[str, Dict] = dataclasses.field(default_factory=dict)
 
@@ -143,25 +293,47 @@ class AggregateIndex:
 
     def from_sketch_state(self, cfg, state: Dict, names: Sequence[str],
                           attrs=("size", "atime", "ctime", "mtime"),
-                          qs=(0.10, 0.25, 0.50, 0.75, 0.90, 0.99)) -> None:
-        """Bulk-load from a (P, A, NB) device sketch state."""
-        summ = dds.summary(cfg, state, np.asarray(qs))
-        quants = np.asarray(summ["quantiles"])       # (P, A, Q)
-        for p, name in enumerate(names):
-            if float(np.asarray(summ["count"])[p, 0]) <= 0:
+                          qs=(0.10, 0.25, 0.50, 0.75, 0.90, 0.99),
+                          only: Optional[Sequence[int]] = None) -> None:
+        """(Re)publish summaries from a (P, A, NB) device sketch state.
+
+        ``only`` restricts publication to the given principal indices —
+        the event-ingestion hot path refreshes just the principals an
+        event batch touched instead of all P of them (paper §IV-B3).
+        """
+        if only is not None:
+            sel = np.asarray(list(only), np.int64)
+            if len(sel) == 0:
+                return
+            # pad the slice to a power-of-two bucket: the jitted
+            # gather+summary then sees O(log P) distinct shapes instead
+            # of one compile per touched-principal count
+            padded = pad_1d(sel, bucket_pow2(len(sel)))
+            idx = sel
+        else:
+            padded = None
+            idx = np.arange(len(names))
+        summ = {k: np.asarray(v)
+                for k, v in _summary_jit(
+                    cfg, state, jnp.asarray(qs),
+                    None if padded is None else jnp.asarray(padded)
+                ).items()}
+        quants = summ["quantiles"]                   # (P', A, Q)
+        for row, p in enumerate(idx):
+            name = names[int(p)]
+            if float(summ["count"][row, 0]) <= 0:
                 continue
-            content = {"file_count": float(np.asarray(summ["count"])[p, 0])}
+            content = {"file_count": float(summ["count"][row, 0])}
             for ai, attr in enumerate(attrs):
                 content[attr] = {
-                    "min": float(np.asarray(summ["min"])[p, ai]),
-                    "max": float(np.asarray(summ["max"])[p, ai]),
-                    "mean": float(np.asarray(summ["mean"])[p, ai]),
-                    **{f"p{int(q * 100):02d}": float(quants[p, ai, qi])
+                    "min": float(summ["min"][row, ai]),
+                    "max": float(summ["max"][row, ai]),
+                    "mean": float(summ["mean"][row, ai]),
+                    **{f"p{int(q * 100):02d}": float(quants[row, ai, qi])
                        for qi, q in enumerate(qs)},
                 }
                 if attr == "size":
-                    content[attr]["total"] = float(
-                        np.asarray(summ["total"])[p, ai])
+                    content[attr]["total"] = float(summ["total"][row, ai])
             self.put(name, content)
 
     def top_k(self, k: int, key=lambda c: c["size"]["total"]) -> List[Tuple[str, Dict]]:

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict
 
 import numpy as np
 

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,10 +44,19 @@ class MonitorConfig:
 
 
 class Monitor:
-    def __init__(self, cfg: MonitorConfig, sink: Optional[Callable] = None):
+    def __init__(self, cfg: MonitorConfig, sink: Optional[Callable] = None,
+                 ingestor=None):
+        """``ingestor``: optional event_ingest.EventIngestor (duck-typed —
+        anything with ``ingest(batch, names=...)``). When attached, every
+        micro-batch this monitor processes is also fed to the dual index,
+        so monitoring and index synchronization share one consumer — the
+        paper's real-time path (§IV-B3). Visibility follows the
+        ingestor's consistency mode (eager: before process() returns;
+        buffered: at its watermark flush)."""
         self.cfg = cfg
         self.state = hi.init_hierarchy(cfg.max_fids)
         self.sink = sink or (lambda updates, deletes: None)
+        self.ingestor = ingestor
         self.metrics = {"events_in": 0, "updates": 0, "deletes": 0,
                         "cancelled": 0, "batches": 0, "stat_calls": 0}
         self._step = jax.jit(self._make_step(), donate_argnums=(0,))
@@ -91,8 +100,13 @@ class Monitor:
         self.state, _ = self._step(self.state, jb,
                                    jnp.zeros(self.cfg.batch_size, bool))
 
-    def process(self, batch_np: Dict[str, np.ndarray]) -> Dict[str, int]:
-        """One micro-batch (padded to cfg.batch_size)."""
+    def process(self, batch_np: Dict[str, np.ndarray],
+                names: Optional[Dict[int, str]] = None) -> Dict[str, int]:
+        """One micro-batch (padded to cfg.batch_size). ``names`` is the
+        event source's fid -> path-component side table, forwarded to the
+        attached index ingestor (if any)."""
+        if self.ingestor is not None:
+            self.ingestor.ingest(batch_np, names=names)
         n = len(batch_np["fid"])
         bs = self.cfg.batch_size
         padded = ev.empty_batch(bs)
@@ -131,12 +145,16 @@ class Monitor:
         while len(stream):
             batch = stream.take(self.cfg.batch_size)
             n_events += len(batch["fid"])
-            self.process(batch)
+            self.process(batch, names=stream.take_names())
             if time_budget and time.perf_counter() - t0 > time_budget:
                 break
         dt = time.perf_counter() - t0
-        return {"events": n_events, "seconds": dt,
-                "events_per_s": n_events / max(dt, 1e-9), **self.metrics}
+        out = {"events": n_events, "seconds": dt,
+               "events_per_s": n_events / max(dt, 1e-9), **self.metrics}
+        if self.ingestor is not None:
+            out["watermark_seq"] = self.ingestor.freshness()["applied_seq"]
+            out["pending_events"] = self.ingestor.freshness()["pending_events"]
+        return out
 
 
 class MonitorPool:

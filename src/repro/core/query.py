@@ -4,6 +4,15 @@ lookups on the aggregate index.
 
 This is the programmatic surface the paper's web interface (graphical
 query builder / raw regex mode / summary templates) sits on.
+
+Consistency semantics (paper §V-C; DESIGN.md §6.3): each query reads a
+``live()`` view materialized at call time, so one query is internally
+consistent — it never mixes a record's pre- and post-update columns. Two
+successive queries may straddle an event-ingest apply and disagree;
+callers that care attach the freshness watermark via ``freshness()`` /
+``query()``, which reports the changelog seq the read data reflects and
+how many events are still buffered behind it (nonzero only in the
+ingestor's ``buffered`` mode).
 """
 from __future__ import annotations
 
@@ -18,10 +27,29 @@ from repro.core.index import AggregateIndex, PrimaryIndex
 
 class QueryEngine:
     def __init__(self, primary: PrimaryIndex, aggregate: AggregateIndex,
-                 now: float = 1.7e9):
+                 now: float = 1.7e9, ingestor=None):
+        """``ingestor``: optional event_ingest.EventIngestor (duck-typed —
+        anything with ``freshness()``) whose watermark stamps results."""
         self.primary = primary
         self.aggregate = aggregate
         self.now = now
+        self.ingestor = ingestor
+
+    # -- freshness (paper's consistency/latency/freshness knobs) --------------
+
+    def freshness(self) -> Optional[Dict[str, float]]:
+        """Watermark of the data this engine reads: highest applied
+        changelog seq, pending (buffered, not yet visible) events, and
+        staleness seconds. None when no event ingestor is attached
+        (pure-snapshot deployments)."""
+        return self.ingestor.freshness() if self.ingestor else None
+
+    def query(self, name: str, *args, **kw) -> Dict:
+        """Run a named query and stamp the result with the freshness
+        watermark it was read at — the shape the paper's web interface
+        returns ({"result": ..., "freshness": {...}})."""
+        fn = getattr(self, name)
+        return {"result": fn(*args, **kw), "freshness": self.freshness()}
 
     # -- individual-granularity queries (primary index) ----------------------
 
@@ -34,14 +62,18 @@ class QueryEngine:
         return live["path"][mask]
 
     def world_writable(self) -> np.ndarray:
+        """Table I "world-writable files" (security audit): mode & 0o002.
+        Reads the live() snapshot of the primary index."""
         live = self.primary.live()
         return live["path"][(live["mode"] & 0o002) != 0]
 
     def not_accessed_since(self, seconds: float) -> np.ndarray:
+        """Table I "not accessed in N months" (cold-data candidates)."""
         live = self.primary.live()
         return live["path"][live["atime"] < self.now - seconds]
 
     def large_cold_files(self, min_size: float, idle_seconds: float) -> np.ndarray:
+        """Table I "large files with low access" (tiering candidates)."""
         live = self.primary.live()
         m = (live["size"] > min_size) & (live["atime"] < self.now - idle_seconds)
         return live["path"][m]
@@ -59,16 +91,21 @@ class QueryEngine:
         return out
 
     def owned_by_deleted_users(self, active_uids: Sequence[int]) -> np.ndarray:
+        """Table I "files owned by deleted users" (orphan sweep)."""
         live = self.primary.live()
         return live["path"][~np.isin(live["uid"], list(active_uids))]
 
     def past_retention(self, retention_seconds: float) -> np.ndarray:
+        """Table I "past retention policy" (purge candidates)."""
         live = self.primary.live()
         return live["path"][live["mtime"] < self.now - retention_seconds]
 
     # -- aggregate-granularity queries (aggregate index) ----------------------
 
     def directories_over(self, n_files: float) -> List[str]:
+        """Table I "directories with > N entries". Aggregate-index read:
+        per-principal records are whole (never half-written), but may
+        trail the primary index by one apply (DESIGN.md §6.3)."""
         return [p for p, c in self.aggregate.records.items()
                 if p.startswith("dir:") and c["file_count"] > n_files]
 
@@ -79,6 +116,7 @@ class QueryEngine:
 
     def quota_pressure(self, quotas: Dict[str, float], thresh: float = 0.9
                        ) -> List[Tuple[str, float]]:
+        """Table I "principals near quota": total size / quota > thresh."""
         out = []
         for p, c in self.aggregate.records.items():
             q = quotas.get(p)
@@ -109,6 +147,7 @@ class QueryEngine:
                 if p.startswith("dir:")}
 
     def top_storage_users(self, k: int = 10) -> List[Tuple[str, float]]:
+        """Table I "top storage consumers" (admin dashboard staple)."""
         items = [(p, c["size"]["total"])
                  for p, c in self.aggregate.records.items()
                  if p.startswith("user:")]

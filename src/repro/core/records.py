@@ -5,7 +5,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 
 @dataclasses.dataclass

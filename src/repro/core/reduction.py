@@ -18,7 +18,6 @@ sharded over the "data" axis (one monitor shard per MDT / fileset).
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Tuple
 
 import jax

@@ -7,7 +7,7 @@ implementations with default error parameters.
 """
 from __future__ import annotations
 
-from typing import Iterable, Sequence
+from typing import Sequence
 
 import numpy as np
 

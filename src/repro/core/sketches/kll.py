@@ -3,7 +3,7 @@ quantile sketch. Mergeable host implementation (Apache DataSketches default
 k=200)."""
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List
 
 import numpy as np
 

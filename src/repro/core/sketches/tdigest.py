@@ -3,7 +3,7 @@ function (delta=100, the reference default)."""
 from __future__ import annotations
 
 import math
-from typing import List, Tuple
+from typing import List
 
 import numpy as np
 

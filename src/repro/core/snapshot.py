@@ -18,13 +18,12 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import metadata as md

@@ -16,10 +16,9 @@ system (DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
-from typing import Callable, Dict, Iterator, Optional, Tuple
+from typing import Dict, Optional
 
 import numpy as np
 

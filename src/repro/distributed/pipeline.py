@@ -15,12 +15,11 @@ exact equivalence with the sequential stack, including gradients.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 

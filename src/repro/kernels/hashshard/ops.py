@@ -5,7 +5,6 @@ import functools
 import os
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.hashshard.hashshard import hashshard_pallas
 

@@ -98,7 +98,8 @@ def lower_cell(arch: str, shape_name: str, mesh, step_override=None):
 def analyze_compiled(lowered, compiled, cfg, shape, mesh) -> Dict:
     from repro.analysis.hlocost import analyze_hlo
 
-    ca = compiled.cost_analysis() or {}
+    from repro.compat import cost_analysis
+    ca = cost_analysis(compiled)
     try:
         ma = compiled.memory_analysis()
         mem = {

@@ -12,7 +12,6 @@ watching its own training cluster).
 from __future__ import annotations
 
 import argparse
-import os
 import time
 from typing import Optional
 

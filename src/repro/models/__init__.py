@@ -1,9 +1,8 @@
 """Unified model API over all assigned families."""
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig

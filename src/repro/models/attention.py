@@ -7,7 +7,7 @@ the 32k-prefill cells compile within per-device HBM on the production mesh.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

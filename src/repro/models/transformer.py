@@ -13,7 +13,6 @@ same descriptor tree yields init, abstract shapes, and sharding specs.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -1,7 +1,6 @@
 """Serving: prefill + single-token decode step factories."""
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

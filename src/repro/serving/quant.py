@@ -8,7 +8,7 @@ vectors stay bf16 (quality), as do conv kernels.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ what keeps 300B-param optimizer state within per-chip HBM.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

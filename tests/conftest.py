@@ -1,0 +1,113 @@
+"""Test-suite bootstrap.
+
+Provides a deterministic stand-in for ``hypothesis`` when the real
+library is not installed (the CI container bakes in the JAX/Pallas
+toolchain but not hypothesis). The stub implements exactly the API
+surface the suite uses — ``given``, ``settings``, and the ``integers`` /
+``floats`` / ``sampled_from`` / ``lists`` / ``text`` strategies — and
+draws examples from a per-test seeded RNG, so property tests still sweep
+shapes/distributions, just with reproducible draws instead of shrinking.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import zlib
+
+
+def _install_hypothesis_stub():
+    try:
+        import hypothesis  # noqa: F401
+        return
+    except ImportError:
+        pass
+
+    import types
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def integers(min_value=0, max_value=1 << 30):
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+               allow_infinity=False, width=64):
+        lo, hi = float(min_value), float(max_value)
+
+        def draw(rng):
+            # log-uniform when the range spans decades (matches how the
+            # suite uses floats: sketch values over [1e-3, 1e12])
+            if lo > 0 and hi / lo > 1e3:
+                return float(np.exp(rng.uniform(np.log(lo), np.log(hi))))
+            return float(rng.uniform(lo, hi))
+        return _Strategy(draw)
+
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def text(alphabet=None, min_size=0, max_size=10):
+        chars = alphabet or ("abcdefghijklmnopqrstuvwxyz"
+                             "ABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789/_-. ")
+
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return "".join(chars[int(rng.integers(len(chars)))]
+                           for _ in range(n))
+        return _Strategy(draw)
+
+    def given(*arg_strats, **kw_strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*fixture_args, **fixture_kw):
+                n = getattr(runner, "_stub_max_examples", 20)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                for ex in range(n):
+                    rng = np.random.default_rng((seed, ex))
+                    args = tuple(s.example(rng) for s in arg_strats)
+                    kw = {k: s.example(rng) for k, s in kw_strats.items()}
+                    fn(*fixture_args, *args, **fixture_kw, **kw)
+
+            # hide strategy-bound parameters from pytest's fixture resolver
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())[len(arg_strats):]
+            params = [p for p in params if p.name not in kw_strats]
+            runner.__signature__ = sig.replace(parameters=params)
+            return runner
+        return deco
+
+    def settings(max_examples=20, deadline=None, **_ignored):
+        def deco(fn):
+            fn._stub_max_examples = max_examples
+            return fn
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strat = types.ModuleType("hypothesis.strategies")
+    strat.integers = integers
+    strat.sampled_from = sampled_from
+    strat.floats = floats
+    strat.lists = lists
+    strat.text = text
+    mod.strategies = strat
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strat
+
+
+_install_hypothesis_stub()

@@ -1,6 +1,5 @@
 """Attention correctness: chunked/local/decode variants vs dense softmax
 oracles, with hypothesis sweeps."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,13 +1,10 @@
 """Checkpoint/restart: atomicity, retention, resume-equivalence, hedged
 data pipeline, end-to-end driver."""
-import json
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
 from repro.checkpoint.manager import latest_step

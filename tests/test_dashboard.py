@@ -1,6 +1,5 @@
 """Web-interface analogue: templates, top-K views, policy reports."""
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import snapshot as snap
 from repro.core.dashboard import (principal_summary, render_dashboard,

@@ -1,6 +1,5 @@
 """Pallas kernel validation (interpret=True) against pure-jnp oracles,
 with hypothesis sweeps over shapes/distributions."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,12 +1,10 @@
 """Event-reduction + monitor semantics vs a naive Python replay oracle."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import events as ev
 from repro.core import hierarchy as hi
-from repro.core import reduction
 from repro.core.fsmonitor_baseline import FSMonitorBaseline
 from repro.core.monitor import Monitor, MonitorConfig
 

@@ -9,8 +9,7 @@ import pytest
 from repro.core import snapshot as snap
 from repro.core.eventlog import EventLog
 from repro.core.index import AggregateIndex, PrimaryIndex
-from repro.core.metadata import (TYPE_DIR, files_only, path_hash,
-                                 synth_filesystem)
+from repro.core.metadata import files_only, path_hash, synth_filesystem
 from repro.core.query import QueryEngine
 from repro.core.records import IngestBatcher
 from repro.core.sketches.ddsketch import DDSketchConfig

@@ -3,7 +3,6 @@ equivalence, schedules, quantization, grad compression."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.data.specs import materialize_train_batch, reduced_config, reduced_shape
