@@ -17,6 +17,7 @@ BENCHES = [
     ("table7_sketch_error", "benchmarks.bench_sketch_error"),
     ("table8_monitor", "benchmarks.bench_monitor"),
     ("event_ingest", "benchmarks.bench_event_ingest"),
+    ("sharded_index", "benchmarks.bench_sharded"),
     ("fig3_5_scaling", "benchmarks.bench_scaling"),
     ("table1_queries", "benchmarks.bench_index_query"),
     ("roofline", "benchmarks.bench_roofline"),

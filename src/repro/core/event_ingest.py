@@ -162,6 +162,16 @@ class EventIngestor:
                  names: Optional[Dict[int, str]] = None,
                  principal_names: Optional[Sequence[str]] = None,
                  clock: Callable[[], float] = time.monotonic):
+        """``primary`` may be a monolithic ``PrimaryIndex`` or a
+        ``sharded_index.ShardedPrimaryIndex`` — the ingestor only uses
+        the shared mutation protocol (upsert_batch / delete_batch /
+        get_record). With a sharded primary, each coalesced micro-batch
+        routes per shard by path hash inside the index; THIS ingestor
+        still owns the single global watermark/version clock, so
+        freshness semantics are identical. A rename that migrates a
+        record between shards is already a delete+upsert pair here (old
+        subject tombstone + new subject upsert) and each half routes
+        independently (DESIGN.md §8)."""
         self.cfg = cfg
         self.pcfg = pcfg
         self.primary = primary
@@ -496,6 +506,11 @@ class EventIngestor:
                 st["size"] = float(facts["size"][i])
             if facts["has_mtime"][i]:
                 st["mtime"] = float(facts["mtime"][i])
+                # snapshot-seeded access times are stale once an event
+                # touches the record; drop them so downstream writers
+                # fall back to the atime=ctime=mtime event convention
+                st.pop("atime", None)
+                st.pop("ctime", None)
             if facts["has_uid"][i]:
                 st["uid"] = int(facts["uid"][i])
             if facts["has_gid"][i]:
@@ -505,21 +520,43 @@ class EventIngestor:
         memo: Dict[int, str] = {}
 
         def resolve(f: int) -> str:
-            got = memo.get(f)
-            if got is not None:
-                return got
-            name = self._name.get(f)
-            if name is None:
-                # fid never registered (e.g. scanned by a snapshot before
-                # this ingestor attached): subjects resolved through this
-                # fallback cannot match the snapshot-loaded record — count
-                # it loudly; deployments should register_tree() first
-                self.metrics["unresolved"] += 1
-                name = f"#{f}"
-            p = self._parent.get(f, -1)
-            path = ("/" + name) if p < 0 else resolve(p) + "/" + name
-            memo[f] = path
-            return path
+            # iterative parent walk: collect the unmemoized ancestor
+            # chain, then fill memo root-to-leaf (no recursion cap, so
+            # legitimately deep trees resolve; only a TRUE parent cycle
+            # — corrupt changelog, a real FS rejects subtree-into-itself
+            # renames — anchors at a loud marker instead of looping)
+            chain = []
+            on_walk = set()
+            cur = f
+            while True:
+                got = memo.get(cur)
+                if got is not None:
+                    prefix = got
+                    break
+                if cur in on_walk:
+                    self.metrics["unresolved"] += 1
+                    prefix = f"/#cycle#{cur}"
+                    break
+                on_walk.add(cur)
+                name = self._name.get(cur)
+                if name is None:
+                    # fid never registered (e.g. scanned by a snapshot
+                    # before this ingestor attached): subjects resolved
+                    # through this fallback cannot match the snapshot-
+                    # loaded record — count it loudly; deployments
+                    # should register_tree() first
+                    self.metrics["unresolved"] += 1
+                    name = f"#{cur}"
+                chain.append((cur, name))
+                p = self._parent.get(cur, -1)
+                if p < 0:
+                    prefix = ""
+                    break
+                cur = p
+            for fid, name in reversed(chain):
+                prefix = prefix + "/" + name
+                memo[fid] = prefix
+            return memo[f] if chain else prefix
         return resolve
 
     def register_tree(self, parents: Dict[int, int], names: Dict[int, str],
@@ -564,13 +601,12 @@ class EventIngestor:
     def _record_fields(self, path: str) -> Optional[Dict[str, float]]:
         """Owner/stat of the indexed record at ``path`` (live or not) —
         the fallback fact source for fids the state manager only knows
-        via register_tree."""
-        slot = self.primary._slot.get(path)
-        if slot is None:
-            return None
-        cols = self.primary.columns
-        return {k: cols[k][slot].item()
-                for k in ("uid", "gid", "size", "mtime") if k in cols}
+        via register_tree. Routes through the index's ``get_record`` so
+        sharded primaries resolve it in the owning shard. Includes
+        atime/ctime so a repath can move a snapshot-loaded record
+        without zeroing its access times."""
+        return self.primary.get_record(
+            path, keys=("uid", "gid", "size", "mtime", "atime", "ctime"))
 
     def _repath(self, old_desc: Dict[int, str],
                 resolve: Callable[[int], str], version: int,
@@ -595,14 +631,21 @@ class EventIngestor:
             stats.append(st)
         if not news:
             return {}, {}
+        mtimes = np.array([s.get("mtime", 0.0) for s in stats], np.float32)
         fields = {
             "path_hash": np.array([md.path_hash(p) for p in news], np.uint32),
             "type": np.full(len(news), md.TYPE_FILE, np.int32),
             "uid": np.array([s.get("uid", 0) for s in stats], np.int32),
             "gid": np.array([s.get("gid", 0) for s in stats], np.int32),
             "size": np.array([s.get("size", 0.0) for s in stats], np.float32),
-            "mtime": np.array([s.get("mtime", 0.0) for s in stats],
-                              np.float32),
+            "mtime": mtimes,
+            # a repath moves the record, it does not touch it: carry the
+            # stored access times (event-derived records fall back to the
+            # mtime convention, DESIGN.md §6.2)
+            "atime": np.array([s.get("atime", s.get("mtime", 0.0))
+                               for s in stats], np.float32),
+            "ctime": np.array([s.get("ctime", s.get("mtime", 0.0))
+                               for s in stats], np.float32),
         }
         return {"old": olds, "new": news}, fields
 

@@ -46,11 +46,77 @@ def pad_1d(a: np.ndarray, n: int, fill=0) -> np.ndarray:
     return np.concatenate([a, np.full(n - len(a), fill, a.dtype)])
 
 
+def _contig_slice(slots: np.ndarray) -> Optional[slice]:
+    """slice(lo, hi) iff ``slots`` is exactly arange(lo, hi) — the common
+    bulk-ingest shape (fresh or same-order re-scan), where column writes
+    collapse from fancy scatters to memcpy slices."""
+    n = len(slots)
+    if n == 0:
+        return None
+    lo = int(slots[0])
+    if int(slots[-1]) - lo + 1 != n:
+        return None
+    if n > 1 and not (np.diff(slots) == 1).all():
+        return None
+    return slice(lo, lo + n)
+
+
 @functools.partial(jax.jit, static_argnums=(0,))
 def _summary_jit(cfg, state, qs, sel=None):
     if sel is not None:
         state = jax.tree.map(lambda s: s[sel], state)
     return dds.summary(cfg, state, qs)
+
+
+class DictSlotMap:
+    """Subject -> slot assignment backed by a plain Python dict — the
+    monolithic index's default. The slot-map protocol (``assign`` /
+    ``lookup`` / ``get`` / ``__len__``) is what lets the sharded index
+    (core/sharded_index.py) swap in a vectorized hash-keyed map without
+    touching the columnar store logic."""
+
+    def __init__(self):
+        self._d: Dict[str, int] = {}
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def get(self, path: str) -> Optional[int]:
+        return self._d.get(path)
+
+    def get_or_add(self, path: str) -> Tuple[int, bool]:
+        slot = self._d.get(path)
+        if slot is not None:
+            return slot, False
+        slot = len(self._d)
+        self._d[path] = slot
+        return slot, True
+
+    def assign(self, paths: Sequence[str],
+               hashes: Optional[np.ndarray] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """(slots, new_mask) for a batch; new paths get fresh slots in
+        first-occurrence order (``hashes`` is accepted for protocol
+        parity and ignored — the dict keys on the full string)."""
+        n = len(paths)
+        slots = np.empty(n, np.int64)
+        new_mask = np.zeros(n, bool)
+        d = self._d
+        for i, p in enumerate(paths):   # the only host loop
+            s = d.get(p)
+            if s is None:
+                s = len(d)
+                d[p] = s
+                new_mask[i] = True
+            slots[i] = s
+        return slots, new_mask
+
+    def lookup(self, paths: Sequence[str],
+               hashes: Optional[np.ndarray] = None) -> np.ndarray:
+        """Slots for known paths, -1 for unknown (no insertion)."""
+        n = len(paths)
+        return np.fromiter((self._d.get(p, -1) for p in paths),
+                           np.int64, n)
 
 
 @dataclasses.dataclass
@@ -66,31 +132,85 @@ class PrimaryIndex:
         default_factory=lambda: np.zeros(0, np.int64))
     alive: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0, bool))
-    _slot: Dict[str, int] = dataclasses.field(default_factory=dict)
+    slot_map: DictSlotMap = dataclasses.field(default_factory=DictSlotMap)
+
+    @property
+    def _slot(self):
+        """Back-compat alias: the slot map supports ``get`` and ``len``
+        like the dict it replaced."""
+        return self.slot_map
 
     def ingest_table(self, table: md.MetadataTable, version: int) -> int:
-        """Bulk snapshot ingest (vectorized; idempotent by version)."""
+        """Bulk snapshot ingest (vectorized; idempotent by version). The
+        table's ``path_hash`` column (the hashshard kernel's FNV family)
+        rides along for slot maps that key on hashes (slot-map protocol;
+        the sharded layer also routes on it, DESIGN.md §8)."""
         files = md.files_only(table)
-        cols = files.device_columns()
-        n = len(files)
+        # raw column views: ingest_columns casts to STANDARD_COLUMNS
+        # dtypes on assignment (one fused pass, no astype staging)
+        cols = {k: getattr(files, k) for k in self.STANDARD_COLUMNS}
+        return self.ingest_columns(files.paths, cols, version)
+
+    def ingest_columns(self, paths: np.ndarray,
+                       cols: Dict[str, np.ndarray], version: int,
+                       rows: Optional[np.ndarray] = None,
+                       hashes: Optional[np.ndarray] = None) -> int:
+        """`ingest_table` after preprocessing: column arrays aligned with
+        ``paths`` (or indexed by ``rows`` — the sharded split passes the
+        FULL table columns plus each shard's row-index array, so the
+        gather, the device-dtype cast, and the arena write fuse into one
+        C pass per column). Storage dtypes follow STANDARD_COLUMNS for
+        known columns (assignment casts on the fly). Paths are written
+        for NEW slots only (existing slots hold the identical subject),
+        and contiguous slot runs take memcpy slice writes instead of
+        fancy scatters."""
+        if hashes is None:
+            hashes = np.asarray(cols["path_hash"], np.uint32)
+            if rows is not None:
+                hashes = hashes[rows]
+
+        def dtype_of(k, v):
+            return self.STANDARD_COLUMNS.get(k, v.dtype)
+
         if not self.columns:
-            self.columns = {k: np.zeros(0, v.dtype) for k, v in cols.items()}
-        slots = np.empty(n, np.int64)
-        n_new = 0
-        for i in range(n):  # slot assignment (dict) — the only host loop
-            p = files.paths[i]
-            s = self._slot.get(p)
-            if s is None:
-                s = len(self._slot)
-                self._slot[p] = s
-                n_new += 1
-            slots[i] = s
-        self._ensure_capacity(max(0, len(self._slot) - len(self.paths)))
-        self.paths[slots] = files.paths
-        mask = version >= self.version[slots]
-        sel = slots[mask]
+            self.columns = {k: np.zeros(0, dtype_of(k, v))
+                            for k, v in cols.items()}
+        slots, new_mask = self.slot_map.assign(paths, hashes)
+        n_new = int(new_mask.sum())
+        self._ensure_capacity(max(0, len(self.slot_map) - len(self.paths)))
         for k, v in cols.items():
-            self.columns[k][sel] = v[mask]
+            if k not in self.columns:
+                self.columns[k] = np.zeros(len(self.paths), dtype_of(k, v))
+        if n_new:
+            self.paths[slots[new_mask]] = paths[new_mask]
+        sl = _contig_slice(slots)
+        if sl is not None and rows is None:
+            mask = version >= self.version[sl]
+            if mask.all():
+                for k, v in cols.items():
+                    self.columns[k][sl] = v
+                sel = sl
+            else:
+                sel = slots[mask]
+                for k, v in cols.items():
+                    self.columns[k][sel] = v[mask]
+        elif sl is not None:
+            mask = version >= self.version[sl]
+            if mask.all():
+                for k, v in cols.items():
+                    self.columns[k][sl] = v[rows]    # fused gather+cast
+                sel = sl
+            else:
+                sel = slots[mask]
+                rsel = rows[mask]
+                for k, v in cols.items():
+                    self.columns[k][sel] = v[rsel]
+        else:
+            mask = version >= self.version[slots]
+            sel = slots[mask]
+            rsel = mask if rows is None else rows[mask]
+            for k, v in cols.items():
+                self.columns[k][sel] = v[rsel]
         self.version[sel] = version
         self.alive[sel] = True
         self.invalidate_older(version)
@@ -117,12 +237,11 @@ class PrimaryIndex:
         if not self.columns:
             self.columns = {k: np.zeros(0, np.asarray(v).dtype)
                             for k, v in fields.items()}
-        slot = self._slot.get(path)
+        slot, is_new = self.slot_map.get_or_add(path)
         new = 0
-        if slot is None:
-            self._ensure_capacity(1)
-            slot = len(self._slot)
-            self._slot[path] = slot
+        if is_new:
+            self._ensure_capacity(max(0, len(self.slot_map)
+                                      - len(self.paths)))
             self.paths[slot] = path
             new = 1
         if version >= self.version[slot]:
@@ -151,7 +270,8 @@ class PrimaryIndex:
     # -- batched event-path mutations (paper §IV-B3; DESIGN.md §6) ------------
 
     def upsert_batch(self, paths: Sequence[str], fields: Dict[str, np.ndarray],
-                     versions: np.ndarray) -> np.ndarray:
+                     versions: np.ndarray,
+                     hashes: Optional[np.ndarray] = None) -> np.ndarray:
         """Vectorized columnar upsert for a coalesced event batch.
 
         ``fields`` maps column name -> (N,) array; only the given columns
@@ -164,10 +284,12 @@ class PrimaryIndex:
         batch must be ordered by seq ascending — numpy scatter gives
         last-occurrence-wins, matching changelog order.
 
-        Slot assignment is one dict sweep (the only host loop, as in
-        ``ingest_table``); every column write is a fancy-index scatter.
-        Returns a (N,) bool mask marking one row per subject that
-        ENTERED the live set — a brand-new slot or a tombstoned slot
+        Slot assignment is one slot-map sweep (the only host loop in the
+        dict-backed default); every column write is a fancy-index
+        scatter. ``hashes`` optionally forwards precomputed FNV path
+        hashes (``fields["path_hash"]`` on the event path) to hash-keyed
+        slot maps. Returns a (N,) bool mask marking one row per subject
+        that ENTERED the live set — a brand-new slot or a tombstoned slot
         resurrected by this batch — i.e. the counting pipeline's +1
         delta (a recreate after a delete must count again).
         """
@@ -182,17 +304,13 @@ class PrimaryIndex:
             if k not in self.columns:
                 self.columns[k] = np.zeros(len(self.paths),
                                            np.asarray(v).dtype)
-        slots = np.empty(n, np.int64)
-        new_mask = np.zeros(n, bool)
-        for i, p in enumerate(paths):     # slot assignment (dict sweep)
-            s = self._slot.get(p)
-            if s is None:
-                s = len(self._slot)
-                self._slot[p] = s
-                new_mask[i] = True
-            slots[i] = s
-        self._ensure_capacity(max(0, len(self._slot) - len(self.paths)))
-        self.paths[slots] = np.asarray(paths, object)
+        if hashes is None and "path_hash" in fields:
+            hashes = np.asarray(fields["path_hash"], np.uint32)
+        slots, new_mask = self.slot_map.assign(paths, hashes)
+        self._ensure_capacity(max(0, len(self.slot_map) - len(self.paths)))
+        if new_mask.any():
+            self.paths[slots[new_mask]] = np.asarray(
+                paths, object)[new_mask]
         prev_alive = self.alive[slots] & ~new_mask   # pre-batch liveness
         ok = versions >= self.version[slots]
         sel = slots[ok]
@@ -210,18 +328,18 @@ class PrimaryIndex:
         return out
 
     def delete_batch(self, paths: Sequence[str],
-                     versions: np.ndarray) -> np.ndarray:
+                     versions: np.ndarray,
+                     hashes: Optional[np.ndarray] = None) -> np.ndarray:
         """Vectorized tombstones. Unknown subjects are ignored (a delete
         for a record the index never saw — e.g. created and removed
         between snapshots with OPEN filtering on). Returns a (N,) bool
         mask of rows that transitioned live -> dead (the counting
         pipeline's -1 delta)."""
         n = len(paths)
-        if n == 0 or not self._slot:      # nothing indexed yet
+        if n == 0 or not len(self.slot_map):      # nothing indexed yet
             return np.zeros(n, bool)
         versions = np.broadcast_to(np.asarray(versions, np.int64), (n,))
-        slots = np.fromiter((self._slot.get(p, -1) for p in paths),
-                            np.int64, n)
+        slots = self.slot_map.lookup(paths, hashes)
         known = slots >= 0
         s = np.clip(slots, 0, None)
         ok = known & (versions >= self.version[s])
@@ -237,7 +355,7 @@ class PrimaryIndex:
         `version` (the snapshot asserted absence at that point of the
         logical clock), so replaying a pre-snapshot event suffix cannot
         resurrect them."""
-        n = len(self._slot)
+        n = len(self.slot_map)
         stale = self.alive[:n] & (self.version[:n] < version)
         self.alive[:n] &= ~stale
         self.version[:n][stale] = version
@@ -258,7 +376,7 @@ class PrimaryIndex:
         """Snapshot view of all live records, schema-stable: queries can
         rely on every STANDARD_COLUMNS key being present (zeros when no
         ingest has populated it — e.g. events carry no mode bits)."""
-        n = len(self._slot)
+        n = len(self.slot_map)
         mask = self.alive[:n]
         out = {k: v[:n][mask] for k, v in self.columns.items()}
         out["path"] = self.paths[:n][mask]
@@ -268,8 +386,37 @@ class PrimaryIndex:
                 out[k] = np.zeros(m, dt)
         return out
 
+    def live_paths(self) -> np.ndarray:
+        """Paths of live records only — no column copies. Path-predicate
+        queries (QueryEngine.find_by_name) read this instead of the full
+        ``live()`` materialization."""
+        n = len(self.slot_map)
+        return self.paths[:n][self.alive[:n]]
+
+    def get_record(self, path: str, keys: Sequence[str] = (
+            "uid", "gid", "size", "mtime")) -> Optional[Dict[str, float]]:
+        """Stored fields of the record at ``path`` (live or tombstoned);
+        None if the subject was never indexed. The event ingestor's
+        fallback fact source for register_tree-only fids."""
+        slot = self.slot_map.get(path)
+        if slot is None:
+            return None
+        return {k: self.columns[k][slot].item()
+                for k in keys if k in self.columns}
+
+    def lookup(self, path: str) -> Optional[Dict[str, float]]:
+        """Point query: the full record at ``path`` if it is live, else
+        None. One slot-map probe + one row gather — no scan."""
+        slot = self.slot_map.get(path)
+        if slot is None or not self.alive[slot]:
+            return None
+        out = {k: v[slot].item() for k, v in self.columns.items()}
+        out["path"] = path
+        out["version"] = int(self.version[slot])
+        return out
+
     def __len__(self) -> int:
-        return int(self.alive[:len(self._slot)].sum())
+        return int(self.alive[:len(self.slot_map)].sum())
 
 
 @dataclasses.dataclass

@@ -17,6 +17,12 @@ TYPE_FILE = 0
 TYPE_LINK = 1
 TYPE_DIR = 2
 
+# FNV-1a 32-bit constants — the ONE hash family shared by path_hash,
+# the hashshard device kernel, and sharded-index routing (a record's
+# shard is a pure function of these; every consumer imports from here)
+FNV_OFFSET = 0x811C9DC5
+FNV_PRIME = 0x01000193
+
 
 def crc32_shard(payload: bytes, n_shards: int = 64) -> int:
     """The paper's shard function: zlib.crc32 over the row's UTF-8 bytes."""
@@ -25,10 +31,10 @@ def crc32_shard(payload: bytes, n_shards: int = 64) -> int:
 
 def path_hash(path: str) -> int:
     """FNV-1a 32-bit (device kernel hashshard mirrors this)."""
-    h = 0x811C9DC5
+    h = FNV_OFFSET
     for b in path.encode("utf-8", "surrogatepass"):
         h ^= b
-        h = (h * 0x01000193) & 0xFFFFFFFF
+        h = (h * FNV_PRIME) & 0xFFFFFFFF
     return h
 
 
@@ -152,5 +158,10 @@ def synth_filesystem(
 
 def files_only(table: MetadataTable) -> MetadataTable:
     """Paper §V-A2: FS-medium preprocessing filters out directory entries,
-    retaining only files and links."""
-    return table.select(table.type != TYPE_DIR)
+    retaining only files and links. Already-filtered tables pass through
+    without the 13-column copy (the sharded ingest path re-filters
+    per-shard sub-tables)."""
+    mask = table.type != TYPE_DIR
+    if mask.all():
+        return table
+    return table.select(mask)

@@ -159,10 +159,28 @@ class Monitor:
 
 class MonitorPool:
     """One monitor per MDT / fileset (paper §IV-B4): linear scaling by
-    aligning monitor instances with metadata partitions."""
+    aligning monitor instances with metadata partitions.
 
-    def __init__(self, n: int, cfg: MonitorConfig):
-        self.monitors = [Monitor(cfg) for _ in range(n)]
+    ``ingestors`` optionally attaches one event ingestor per monitor
+    (each feeding its partition of the dual index — e.g. a sharded
+    primary). The pool then exports deployment-wide freshness as the
+    MIN watermark over partitions (query.merge_freshness): a reader is
+    only as fresh as the stalest partition behind it (DESIGN.md §8)."""
+
+    def __init__(self, n: int, cfg: MonitorConfig, ingestors=None):
+        assert ingestors is None or len(ingestors) == n
+        self.ingestors = ingestors
+        self.monitors = [
+            Monitor(cfg, ingestor=ingestors[i] if ingestors else None)
+            for i in range(n)]
+
+    def freshness(self) -> Optional[Dict[str, float]]:
+        """Min-merged watermark over the pool's partitions (None when no
+        ingestors are attached)."""
+        if not self.ingestors:
+            return None
+        from repro.core.query import merge_freshness
+        return merge_freshness([i.freshness() for i in self.ingestors])
 
     def run(self, streams: List[ev.EventStream]) -> Dict[str, float]:
         assert len(streams) == len(self.monitors)
@@ -172,5 +190,10 @@ class MonitorPool:
             r = mon.run(s)
             total += r["events"]
         dt = time.perf_counter() - t0
-        return {"events": total, "seconds": dt,
-                "events_per_s": total / max(dt, 1e-9)}
+        out = {"events": total, "seconds": dt,
+               "events_per_s": total / max(dt, 1e-9)}
+        fr = self.freshness()
+        if fr is not None:
+            out["watermark_seq"] = fr["applied_seq"]
+            out["pending_events"] = fr["pending_events"]
+        return out

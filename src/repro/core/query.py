@@ -5,6 +5,12 @@ lookups on the aggregate index.
 This is the programmatic surface the paper's web interface (graphical
 query builder / raw regex mode / summary templates) sits on.
 
+The engine is index-shape agnostic: ``primary`` may be the monolithic
+``PrimaryIndex`` or a ``sharded_index.ShardedPrimaryIndex``. Scans read
+the schema-stable ``live()`` view — on a sharded primary that is a
+scatter-gather (per-shard views fanned out and merged); point lookups
+(``stat``) route to the single owning shard (DESIGN.md §8).
+
 Consistency semantics (paper §V-C; DESIGN.md §6.3): each query reads a
 ``live()`` view materialized at call time, so one query is internally
 consistent — it never mixes a record's pre- and post-update columns. Two
@@ -25,11 +31,32 @@ import numpy as np
 from repro.core.index import AggregateIndex, PrimaryIndex
 
 
+def merge_freshness(marks: Sequence[Dict[str, float]]
+                    ) -> Optional[Dict[str, float]]:
+    """Combine per-partition watermarks into the deployment-wide one: a
+    reader is only as fresh as its STALEST partition, so ``applied_seq``
+    is the min over sources, ``staleness_s`` the max, and pending events
+    sum (paper §IV-B4: one monitor/ingestor per MDT or index shard)."""
+    marks = [m for m in marks if m]
+    if not marks:
+        return None
+    return {
+        "mode": "+".join(sorted({str(m.get("mode")) for m in marks})),
+        "applied_seq": min(m["applied_seq"] for m in marks),
+        "pending_events": sum(m["pending_events"] for m in marks),
+        "staleness_s": max(m["staleness_s"] for m in marks),
+        "applied_batches": sum(m.get("applied_batches", 0) for m in marks),
+        "sources": len(marks),
+    }
+
+
 class QueryEngine:
     def __init__(self, primary: PrimaryIndex, aggregate: AggregateIndex,
                  now: float = 1.7e9, ingestor=None):
         """``ingestor``: optional event_ingest.EventIngestor (duck-typed —
-        anything with ``freshness()``) whose watermark stamps results."""
+        anything with ``freshness()``) whose watermark stamps results. A
+        list/tuple of ingestors (e.g. one per MDT feeding a sharded
+        primary) min-merges into one watermark via merge_freshness."""
         self.primary = primary
         self.aggregate = aggregate
         self.now = now
@@ -41,8 +68,13 @@ class QueryEngine:
         """Watermark of the data this engine reads: highest applied
         changelog seq, pending (buffered, not yet visible) events, and
         staleness seconds. None when no event ingestor is attached
-        (pure-snapshot deployments)."""
-        return self.ingestor.freshness() if self.ingestor else None
+        (pure-snapshot deployments). Multiple ingestors min-merge —
+        freshness is the min watermark over partitions."""
+        if self.ingestor is None:
+            return None
+        if isinstance(self.ingestor, (list, tuple)):
+            return merge_freshness([i.freshness() for i in self.ingestor])
+        return self.ingestor.freshness()
 
     def query(self, name: str, *args, **kw) -> Dict:
         """Run a named query and stamp the result with the freshness
@@ -53,13 +85,20 @@ class QueryEngine:
 
     # -- individual-granularity queries (primary index) ----------------------
 
+    def stat(self, path: str) -> Optional[Dict]:
+        """Point lookup by exact subject: one slot-map probe — on a
+        sharded primary this routes to the single owning shard, no
+        scatter (DESIGN.md §8)."""
+        return self.primary.lookup(path)
+
     def find_by_name(self, pattern: str) -> np.ndarray:
-        """name LIKE "*pattern*" (regex-match raw mode)."""
-        live = self.primary.live()
-        rx = re.compile(pattern)
-        mask = np.fromiter((bool(rx.search(p)) for p in live["path"]),
-                           bool, len(live["path"]))
-        return live["path"][mask]
+        """name LIKE "*pattern*" (regex-match raw mode). Scans the
+        path-only live view (``live_paths``) — no full-column
+        materialization — with the regex compiled once and its bound
+        ``search`` applied in a single comprehension pass."""
+        paths = self.primary.live_paths()
+        search = re.compile(pattern).search
+        return paths[[i for i, p in enumerate(paths) if search(p)]]
 
     def world_writable(self) -> np.ndarray:
         """Table I "world-writable files" (security audit): mode & 0o002.

@@ -111,6 +111,23 @@ def preprocess(table: md.MetadataTable, cfg: PipelineConfig) -> Dict[str, np.nda
     }
 
 
+def split_table_by_shard(table: md.MetadataTable, n_shards: int
+                         ) -> List[md.MetadataTable]:
+    """Partition a scan table into per-shard sub-tables by the FNV path
+    hash — the preprocessing step that feeds ``ShardedPrimaryIndex.
+    ingest_tables`` (DESIGN.md §8). This is the paper's partitioned scan
+    feed: the scanner (or its Kafka topic) emits one partition per index
+    shard, so downstream ingest never re-routes. Row order inside a
+    partition preserves scan order (stable sort)."""
+    files = md.files_only(table)
+    sids = files.path_hash.astype(np.uint32) % np.uint32(n_shards)
+    order = np.argsort(sids, kind="stable")
+    by_shard = files.select(order)
+    bounds = np.searchsorted(sids[order], np.arange(n_shards + 1))
+    return [by_shard.select(slice(int(bounds[s]), int(bounds[s + 1])))
+            for s in range(n_shards)]
+
+
 def pad_rows(rows: Dict[str, np.ndarray], multiple: int) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
     n = len(rows["uid_slot"])
     m = -(-n // multiple) * multiple

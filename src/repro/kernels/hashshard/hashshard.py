@@ -14,8 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-FNV_OFFSET = 0x811C9DC5
-FNV_PRIME = 0x01000193
+from repro.core.metadata import FNV_OFFSET, FNV_PRIME
 
 
 def _kernel(bytes_ref, len_ref, hash_ref, shard_ref, *, n_shards: int):

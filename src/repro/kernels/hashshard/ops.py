@@ -15,3 +15,19 @@ INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 def hashshard(byte_rows: jax.Array, lengths: jax.Array, n_shards: int = 64):
     return hashshard_pallas(byte_rows, lengths, n_shards,
                             interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _hashshard_oracle(byte_rows: jax.Array, lengths: jax.Array,
+                      n_shards: int = 64):
+    from repro.kernels.hashshard.ref import hashshard_ref
+    return hashshard_ref(byte_rows, lengths, n_shards)
+
+
+def hashshard_route(byte_rows, lengths, n_shards: int = 64):
+    """Batch-routing entry point for the sharded index: the Pallas
+    kernel when compiled (TPU), its jitted jnp oracle under interpret
+    mode — per-grid-step interpretation would dominate a CPU routing hot
+    path. Identical outputs either way (test_kernels pins them)."""
+    fn = _hashshard_oracle if INTERPRET else hashshard
+    return fn(byte_rows, lengths, n_shards)

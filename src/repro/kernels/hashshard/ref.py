@@ -5,19 +5,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-FNV_OFFSET = np.uint32(0x811C9DC5)
-FNV_PRIME = np.uint32(0x01000193)
+from repro.core.metadata import FNV_OFFSET as _FNV_OFFSET
+from repro.core.metadata import FNV_PRIME as _FNV_PRIME
+
+FNV_OFFSET = np.uint32(_FNV_OFFSET)
+FNV_PRIME = np.uint32(_FNV_PRIME)
 
 
 def hashshard_ref(byte_rows: jax.Array, lengths: jax.Array,
                   n_shards: int = 64):
     b = byte_rows.astype(jnp.uint32)
     n, w = b.shape
-    h = jnp.full((n,), jnp.uint32(0x811C9DC5))
+    h = jnp.full((n,), jnp.uint32(FNV_OFFSET))
     col = jnp.arange(w)
     valid = col[None, :] < lengths[:, None]
     for i in range(w):
-        h_new = (h ^ jnp.where(valid[:, i], b[:, i], 0)) * jnp.uint32(0x01000193)
+        h_new = (h ^ jnp.where(valid[:, i], b[:, i], 0)) \
+            * jnp.uint32(FNV_PRIME)
         h = jnp.where(valid[:, i], h_new, h)
     return h, (h % jnp.uint32(n_shards)).astype(jnp.int32)
 
@@ -44,3 +48,38 @@ def encode_strings(strings, width: int = 128):
         rows[i, :len(raw)] = np.frombuffer(raw, np.uint8)
         lens[i] = len(raw)
     return rows, lens
+
+
+def encode_strings_np(strings, width: int = 128):
+    """Vectorized ``encode_strings`` (numpy bytes coercion instead of a
+    per-row Python loop) for the batch-routing hot path. Returns
+    (rows, lens, truncated): ``truncated`` marks rows longer than
+    ``width`` whose hash would desync from the full-length host hash —
+    callers patch those through the scalar fallback. Non-ASCII batches
+    fall back to the loop encoder."""
+    n = len(strings)
+    try:
+        b = np.array(strings if isinstance(strings, list)
+                     else list(strings), dtype=np.bytes_)
+    except UnicodeEncodeError:
+        # non-ASCII (incl. lone surrogates from os.fsdecode'd non-UTF-8
+        # filenames): pack row by row with the same surrogatepass
+        # encoding the scalar hash family uses
+        rows = np.zeros((n, width), np.uint8)
+        lens = np.zeros(n, np.int32)
+        full = np.zeros(n, np.int64)
+        for i, s in enumerate(strings):
+            raw = s.encode("utf-8", "surrogatepass")
+            full[i] = len(raw)
+            raw = raw[:width]
+            rows[i, :len(raw)] = np.frombuffer(raw, np.uint8)
+            lens[i] = len(raw)
+        return rows, lens, full > width
+    w = b.dtype.itemsize
+    full_lens = np.char.str_len(b).astype(np.int32)
+    mat = b.view(np.uint8).reshape(n, w)
+    if w < width:
+        mat = np.pad(mat, ((0, 0), (0, width - w)))
+    elif w > width:
+        mat = np.ascontiguousarray(mat[:, :width])
+    return mat, np.minimum(full_lens, width), full_lens > width
