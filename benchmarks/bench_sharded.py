@@ -95,7 +95,7 @@ def stream_time(idx, files, rounds=2, bs=STREAM_BS):
 
 
 def query_times(idx, sample_paths):
-    q = QueryEngine(idx, AggregateIndex())
+    q = QueryEngine(idx, AggregateIndex(), now=1.7e9)
     t0 = time.perf_counter()
     for p in sample_paths:
         q.stat(p)
@@ -106,8 +106,8 @@ def query_times(idx, sample_paths):
 
 
 def query_results_equal(mono, shd) -> bool:
-    qm = QueryEngine(mono, AggregateIndex())
-    qs = QueryEngine(shd, AggregateIndex())
+    qm = QueryEngine(mono, AggregateIndex(), now=1.7e9)
+    qs = QueryEngine(shd, AggregateIndex(), now=1.7e9)
     checks = [
         sorted(qm.find_by_name(r"f2\d\d$")) == sorted(
             qs.find_by_name(r"f2\d\d$")),

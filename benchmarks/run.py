@@ -18,6 +18,7 @@ BENCHES = [
     ("table8_monitor", "benchmarks.bench_monitor"),
     ("event_ingest", "benchmarks.bench_event_ingest"),
     ("sharded_index", "benchmarks.bench_sharded"),
+    ("reconcile", "benchmarks.bench_reconcile"),
     ("fig3_5_scaling", "benchmarks.bench_scaling"),
     ("table1_queries", "benchmarks.bench_index_query"),
     ("roofline", "benchmarks.bench_roofline"),

@@ -54,7 +54,8 @@ def main():
           f"total={float(np.asarray(counts).sum()):.0f} object-slots")
 
     print("\n== 2. queries (Table I) ==")
-    q = QueryEngine(primary, agg)
+    # now pinned to the synthetic corpus epoch for stable demo output
+    q = QueryEngine(primary, agg, now=1.7e9)
     print("top storage users:", q.top_storage_users(3))
     print("world-writable files:", len(q.world_writable()))
     print("cold large files:", len(q.large_cold_files(1e9, 90 * 86400)))
@@ -78,7 +79,7 @@ def main():
     print("\n== 4. event-based index sync + freshness ==")
     ing = EventIngestor(IngestConfig(mode="eager"), pcfg, primary, agg,
                         names={0: "fs"})
-    q_live = QueryEngine(primary, agg, ingestor=ing)
+    q_live = QueryEngine(primary, agg, now=1.7e9, ingestor=ing)
     stream2 = ev.EventStream(start_fid=1 << 16)
     ev.filebench_workload(stream2, 300, 100, seed=2, has_stat=1,
                           n_users=32, n_groups=8)

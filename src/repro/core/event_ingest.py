@@ -100,12 +100,22 @@ class Watermark:
     ``pending`` counts buffered events not yet applied (always 0 in eager
     mode). ``last_apply_time`` is on the ingestor's clock (monotonic by
     default) so staleness = clock() - last_apply_time.
+
+    ``reconciled_at`` is when the last anti-entropy reconcile completed
+    (core/reconcile.py; 0.0 = never): the moment the index was last
+    known to agree with a full snapshot, i.e. the bound on how long
+    dropped-event drift can have been accumulating. Like
+    ``last_apply_time`` it is ON THE INGESTOR'S CLOCK (monotonic by
+    default, NOT wall-clock epoch) — compute ages as clock() minus the
+    mark, never compare it against ``time.time``; pass
+    ``clock=time.time`` at construction if epoch marks are wanted.
     """
 
     applied_seq: int = 0
     pending: int = 0
     last_apply_time: float = 0.0
     applied_batches: int = 0
+    reconciled_at: float = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -180,7 +190,9 @@ class EventIngestor:
         self.watermark = Watermark(last_apply_time=clock())
         self.metrics = {"events_in": 0, "applied": 0, "upserts": 0,
                         "tombstones": 0, "cancelled": 0, "repathed": 0,
-                        "applies": 0, "sketch_rows": 0, "unresolved": 0}
+                        "applies": 0, "sketch_rows": 0, "unresolved": 0,
+                        "reconciles": 0, "repair_upserts": 0,
+                        "repair_tombstones": 0}
         # host state-manager tables (fid-keyed)
         self._name: Dict[int, str] = dict(names or {})
         self._parent: Dict[int, int] = {}
@@ -191,6 +203,13 @@ class EventIngestor:
         self._sketch_state = dds.init(
             pcfg.sketch, (pcfg.n_principals, len(snap.ATTRS)))
         self.counts = np.zeros((pcfg.n_principals, pcfg.n_shards), np.float32)
+        # counts start exact (empty index as far as this ingestor knows)
+        # and stay exact under event deltas; a snapshot handoff
+        # (register_tree) loads records behind the delta stream's back,
+        # so exactness then requires seed_counts() with the snapshot
+        # counting pipeline's matrix
+        self._counts_seeded = False
+        self._tree_registered = False
         self._principal_names = (list(principal_names) if principal_names
                                  else [f"user:{i}" for i in range(pcfg.n_users)]
                                  + [f"group:{i}" for i in range(pcfg.n_groups)]
@@ -251,6 +270,116 @@ class EventIngestor:
         self._first_buffer_ts = None
         return self._apply(batches)
 
+    def apply_repairs(self, up_paths: Sequence[str],
+                      up_fields: Dict[str, np.ndarray],
+                      del_paths: Sequence[str], del_uid: np.ndarray,
+                      del_gid: np.ndarray, version: int,
+                      del_hashes: Optional[np.ndarray] = None
+                      ) -> Dict[str, int]:
+        """Apply synthetic create/update/delete repair batches from the
+        anti-entropy reconciler (core/reconcile.py; DESIGN.md §9.1)
+        through the SAME primary-mutation + aggregate-delta path an
+        event batch takes, under the shared logical clock: every repair
+        carries ``version`` — the changelog seq at the snapshot's scan
+        time — so the ``>=`` version gate drops any repair that races a
+        fresher event effect (a record the live feed updated after the
+        scan keeps its newer value; one it deleted after the scan stays
+        dead). Buffered events are flushed first so repairs land on the
+        applied state the reconciler diffed. Advances the watermark to
+        ``version`` and stamps ``reconciled_at``.
+
+        ``del_uid`` / ``del_gid`` are the owners of the to-be-deleted
+        records (read from the index by the reconciler) — the counting
+        pipeline's -1 deltas must land on the real principals — and
+        ``del_hashes`` their stored FNV hashes, so routing the
+        tombstones costs no re-hash.
+        """
+        self.flush()
+        n_up = len(up_paths)
+        up_paths = list(up_paths)
+        del_paths = list(del_paths)
+        new_mask = self.primary.upsert_batch(
+            up_paths, up_fields, np.full(n_up, version, np.int64))
+        del_mask = self.primary.delete_batch(
+            del_paths, np.full(len(del_paths), version, np.int64),
+            hashes=del_hashes)
+        up_uid = np.asarray(up_fields["uid"]) if n_up else \
+            np.zeros(0, np.int32)
+        up_gid = np.asarray(up_fields["gid"]) if n_up else \
+            np.zeros(0, np.int32)
+        if self.cfg.update_aggregates:
+            count_jobs = [(up_paths, up_uid, up_gid, +1.0, new_mask),
+                          (del_paths, np.asarray(del_uid, np.int32),
+                           np.asarray(del_gid, np.int32), -1.0, del_mask)]
+            up_size = (np.asarray(up_fields["size"], np.float32) if n_up
+                       else np.zeros(0, np.float32))
+            up_mtime = (np.asarray(up_fields["mtime"], np.float32) if n_up
+                        else np.zeros(0, np.float32))
+            self._apply_aggregates(count_jobs, up_paths, up_uid, up_gid,
+                                   up_size, up_mtime, new_mask)
+        self.metrics["reconciles"] += 1
+        self.metrics["repair_upserts"] += n_up
+        self.metrics["repair_tombstones"] += int(del_mask.sum())
+        self._advance_watermark(version)
+        self.watermark.reconciled_at = self.clock()
+        return {"upserts": n_up, "tombstones": int(del_mask.sum()),
+                "entered": int(new_mask.sum())}
+
+    def principals_of(self, paths: Sequence[str], uid: np.ndarray,
+                      gid: np.ndarray) -> set:
+        """Principal slot ids the given records contribute to (uid slot,
+        gid slot, dir-prefix slots) — what the reconcile/compaction path
+        uses to scope republication."""
+        out: set = set()
+        if len(paths):
+            for pid, w in self._principal_rows(
+                    list(paths), np.asarray(uid, np.int32),
+                    np.asarray(gid, np.int32))[0]:
+                out.update(np.unique(pid[w != 0]).tolist())
+        return out
+
+    @property
+    def counts_exact(self) -> bool:
+        """Whether ``counts`` speaks for the whole index: True unless a
+        snapshot handoff (``register_tree``) loaded records this
+        ingestor's delta stream never saw and ``seed_counts`` was not
+        called. Republication passes exact counts — and therefore drops
+        zero-count principals — only when this holds; otherwise a zero
+        only means "nothing observed HERE" and must not delete
+        snapshot-built summaries."""
+        return self._counts_seeded or not self._tree_registered
+
+    def seed_counts(self, counts: np.ndarray) -> None:
+        """Seed the (P, S) counting matrix from the snapshot counting
+        pipeline's output — the aggregate half of the snapshot -> event
+        handoff (``register_tree`` is the primary-index half). After
+        seeding, event deltas keep the matrix exact over BOTH
+        snapshot-loaded and event-born records, re-arming the
+        zero-count ghost-principal drop."""
+        counts = np.asarray(counts, np.float32)
+        assert counts.shape == self.counts.shape, \
+            (counts.shape, self.counts.shape)
+        self.counts = counts.copy()
+        self._counts_seeded = True
+
+    def _exact_counts(self) -> Optional[np.ndarray]:
+        return self.counts.sum(axis=1) if self.counts_exact else None
+
+    def republish(self, principal_ids: Sequence[int]) -> None:
+        """Republish the given principals from current sketch state with
+        EXACT counts when available (``counts_exact``): principals whose
+        live count has dropped to zero are removed from the aggregate
+        index instead of lingering as ghosts — the reconcile/compaction
+        path's way of flushing dead principals
+        (``AggregateIndex.from_sketch_state(only=...)``). No-op when
+        aggregate maintenance is disabled."""
+        ids = sorted({int(p) for p in principal_ids})
+        if not ids or not self.cfg.update_aggregates:
+            return
+        self.aggregate.from_sketch_state(
+            self.pcfg.sketch, self._sketch_state, self._principal_names,
+            only=ids, counts=self._exact_counts())
+
     def freshness(self) -> Dict[str, float]:
         """The watermark readers attach to results (DESIGN.md §6.3)."""
         return {
@@ -260,6 +389,7 @@ class EventIngestor:
             "staleness_s": max(0.0, self.clock()
                                - self.watermark.last_apply_time),
             "applied_batches": self.watermark.applied_batches,
+            "reconciled_at": self.watermark.reconciled_at,
         }
 
     # -- the apply pipeline ---------------------------------------------------
@@ -304,6 +434,21 @@ class EventIngestor:
                 rec = self._record_fields(pre_resolve(fi))
                 if rec:
                     self._stat[fi] = rec
+        # ownership facts on already-known records: capture the
+        # pre-batch owner BEFORE the fold, so a chown MOVES the count
+        # between principals (the enter/leave deltas alone would strand
+        # it on the old owner — and, worse, drive the old owner's exact
+        # count to zero and ghost-drop a still-live principal)
+        own_rows = np.nonzero((facts["has_uid"] | facts["has_gid"])
+                              & facts["alive"] & ~facts["created"]
+                              & ~facts["is_dir"])[0]
+        pre_own: Dict[int, tuple] = {}
+        for i in own_rows:
+            fi = int(facts["fid"][i])
+            st = self._stat.get(fi)
+            if st is not None:
+                pre_own[fi] = (int(st.get("uid", 0)),
+                               int(st.get("gid", 0)))
         # FILE renames move a single subject: remember the old path now,
         # tombstone it after the fold (dir renames go via old_desc)
         ren_files = facts["renamed"] & ~facts["is_dir"] & facts["alive"]
@@ -349,6 +494,25 @@ class EventIngestor:
         }
         new_mask = self.primary.upsert_batch(up_paths, fields, up_vers)
         count_jobs = [(up_paths, up_uid, up_gid, +1.0, new_mask)]
+        # chown on a record that stayed live: -1 at the old principal
+        # streams, +1 at the new (the dir-prefix components cancel
+        # exactly, so only the uid/gid principals actually move)
+        moved_own = [i for i, f in enumerate(up_fids)
+                     if int(f) in pre_own and not new_mask[i]
+                     and (int(up_uid[i]), int(up_gid[i]))
+                     != pre_own[int(f)]]
+        if moved_own:
+            mv_paths = [up_paths[i] for i in moved_own]
+            sel = np.ones(len(moved_own), bool)
+            count_jobs.append((
+                mv_paths,
+                np.array([pre_own[int(up_fids[i])][0]
+                          for i in moved_own], np.int32),
+                np.array([pre_own[int(up_fids[i])][1]
+                          for i in moved_own], np.int32),
+                -1.0, sel))
+            count_jobs.append((mv_paths, up_uid[moved_own],
+                               up_gid[moved_own], +1.0, sel))
         if re_paths:
             re_vers = np.full(len(re_paths["new"]), rename_seq, np.int64)
             re_new = self.primary.upsert_batch(re_paths["new"], re_fields,
@@ -566,7 +730,10 @@ class EventIngestor:
         scanner records fids, so a changelog event on a pre-scan file
         resolves to the same subject the snapshot indexed). Without this,
         events for unknown fids resolve to '#fid' fallback subjects and
-        cannot touch snapshot-loaded records (metrics['unresolved'])."""
+        cannot touch snapshot-loaded records (metrics['unresolved']).
+        Pair with ``seed_counts`` to keep the aggregate counting matrix
+        exact over the snapshot-loaded records too (``counts_exact``)."""
+        self._tree_registered = True
         self._name.update(names)
         for f, p in parents.items():
             self._parent[f] = p
@@ -739,9 +906,14 @@ class EventIngestor:
             touched.update(np.unique(pid_cat[w_cat != 0]).tolist())
 
         if touched:
+            # exact counts (when the matrix speaks for the whole index,
+            # see counts_exact) override the sketch's additive-only
+            # count, so a principal whose last record died in this batch
+            # is dropped from the aggregate index, not left as a ghost
             self.aggregate.from_sketch_state(
                 cfg.sketch, self._sketch_state, self._principal_names,
-                only=sorted(int(t) for t in touched))
+                only=sorted(int(t) for t in touched),
+                counts=self._exact_counts())
 
     def _count_step(self, pids, sids, weights):
         if self.cfg.use_kernel:

@@ -133,6 +133,13 @@ class PrimaryIndex:
     alive: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0, bool))
     slot_map: DictSlotMap = dataclasses.field(default_factory=DictSlotMap)
+    #: compaction folds reclaimed tombstone versions into this floor: a
+    #: subject UNKNOWN to the slot map may be a reclaimed tombstone, so
+    #: fresh slots materialize carrying version=floor (an implicit
+    #: tombstone) and the normal >= gate decides resurrection — a stale
+    #: replay or pre-compaction scan cannot resurrect a compacted-away
+    #: delete (DESIGN.md §9.2)
+    tombstone_floor: int = 0
 
     @property
     def _slot(self):
@@ -183,6 +190,10 @@ class PrimaryIndex:
                 self.columns[k] = np.zeros(len(self.paths), dtype_of(k, v))
         if n_new:
             self.paths[slots[new_mask]] = paths[new_mask]
+            if self.tombstone_floor:
+                # fresh slots may be reclaimed tombstones: they start at
+                # the compaction floor so the >= gate below decides
+                self.version[slots[new_mask]] = self.tombstone_floor
         sl = _contig_slice(slots)
         if sl is not None and rows is None:
             mask = version >= self.version[sl]
@@ -243,6 +254,8 @@ class PrimaryIndex:
             self._ensure_capacity(max(0, len(self.slot_map)
                                       - len(self.paths)))
             self.paths[slot] = path
+            if self.tombstone_floor:
+                self.version[slot] = self.tombstone_floor
             new = 1
         if version >= self.version[slot]:
             for k, v in fields.items():
@@ -311,6 +324,10 @@ class PrimaryIndex:
         if new_mask.any():
             self.paths[slots[new_mask]] = np.asarray(
                 paths, object)[new_mask]
+            if self.tombstone_floor:
+                # fresh slots may be reclaimed tombstones: start them at
+                # the compaction floor so the >= gate below decides
+                self.version[slots[new_mask]] = self.tombstone_floor
         prev_alive = self.alive[slots] & ~new_mask   # pre-batch liveness
         ok = versions >= self.version[slots]
         sel = slots[ok]
@@ -361,6 +378,63 @@ class PrimaryIndex:
         self.version[:n][stale] = version
         return int(stale.sum())
 
+    # -- tombstone compaction (DESIGN.md §9.2) --------------------------------
+
+    def slot_stats(self) -> Dict[str, float]:
+        """Arena occupancy: assigned slots, live records, and the
+        dead-slot fraction the compaction threshold is compared against
+        (core/reconcile.py)."""
+        n = len(self.slot_map)
+        live = int(self.alive[:n].sum())
+        return {"slots": n, "live": live, "dead": n - live,
+                "dead_fraction": (n - live) / n if n else 0.0}
+
+    def compact(self, slot_map_factory=None) -> int:
+        """Rewrite the arenas to live-only rows and rebuild the slot map
+        (DESIGN.md §9.2). Tombstoned slots are never reclaimed by normal
+        ingest, so every ``live()`` scan pays for all-time deletes;
+        compaction reclaims them. Surviving records keep their versions
+        (the idempotent-replay clock is untouched), and a live run that
+        is already contiguous takes memcpy slice copies instead of fancy
+        gathers. The slot map is rebuilt through the pluggable protocol:
+        ``assign`` numbers fresh subjects in first-occurrence order, so
+        the new map (``slot_map_factory()``, defaulting to the current
+        map's type) is identity-aligned with the compacted arenas.
+        Returns the number of slots reclaimed.
+
+        Reclaimed tombstone versions fold into ``tombstone_floor``
+        (their max), so dropping the slots cannot break the version
+        gate: a later write for a subject the slot map no longer knows
+        materializes its fresh slot AT the floor, and only versions
+        ``>=`` the floor resurrect — a stale event replay or a
+        pre-compaction scan is blocked exactly as the individual
+        tombstones would have blocked it."""
+        n = len(self.slot_map)
+        live_slots = np.nonzero(self.alive[:n])[0]
+        dead = n - len(live_slots)
+        if dead == 0:
+            return 0
+        dead_vers = self.version[:n][~self.alive[:n]]
+        self.tombstone_floor = max(self.tombstone_floor,
+                                   int(dead_vers.max()))
+        sl = _contig_slice(live_slots)
+
+        def take(a):
+            return a[sl].copy() if sl is not None else a[live_slots]
+
+        self.paths = take(self.paths[:n])
+        self.version = take(self.version[:n])
+        self.columns = {k: take(v[:n]) for k, v in self.columns.items()}
+        self.alive = np.ones(len(self.paths), bool)
+        if slot_map_factory is None:
+            slot_map_factory = type(self.slot_map)
+        new_map = slot_map_factory()
+        _, new_mask = new_map.assign(self.paths,
+                                     self.columns.get("path_hash"))
+        assert new_mask.all() and len(new_map) == len(self.paths)
+        self.slot_map = new_map
+        return dead
+
     # -- views ----------------------------------------------------------------
 
     #: the Table-II columns every reader may assume exist; missing ones
@@ -372,26 +446,46 @@ class PrimaryIndex:
         "ctime": np.float32, "mtime": np.float32, "fileset": np.int32,
     }
 
-    def live(self) -> Dict[str, np.ndarray]:
+    def live(self, copy: bool = True) -> Dict[str, np.ndarray]:
         """Snapshot view of all live records, schema-stable: queries can
         rely on every STANDARD_COLUMNS key being present (zeros when no
-        ingest has populated it — e.g. events carry no mode bits)."""
+        ingest has populated it — e.g. events carry no mode bits).
+
+        ``copy=False`` may return arena slice VIEWS on the all-alive
+        fast path — for consumers that immediately materialize anyway
+        (the sharded scatter-gather merge concatenates per shard, so an
+        intermediate defensive copy would be pure waste). Treat the
+        result as read-only and consume it before the next mutation."""
         n = len(self.slot_map)
         mask = self.alive[:n]
-        out = {k: v[:n][mask] for k, v in self.columns.items()}
-        out["path"] = self.paths[:n][mask]
-        m = int(mask.sum())
+        if mask.all():
+            # compacted / never-deleted arenas: contiguous slice copies
+            # (memcpy) instead of a boolean gather per column — the
+            # scan-query payoff compaction buys (DESIGN.md §9.2)
+            out = {k: v[:n].copy() if copy else v[:n]
+                   for k, v in self.columns.items()}
+            out["path"] = self.paths[:n].copy() if copy else self.paths[:n]
+            m = n
+        else:
+            out = {k: v[:n][mask] for k, v in self.columns.items()}
+            out["path"] = self.paths[:n][mask]
+            m = int(mask.sum())
         for k, dt in self.STANDARD_COLUMNS.items():
             if k not in out:
                 out[k] = np.zeros(m, dt)
         return out
 
-    def live_paths(self) -> np.ndarray:
+    def live_paths(self, copy: bool = True) -> np.ndarray:
         """Paths of live records only — no column copies. Path-predicate
         queries (QueryEngine.find_by_name) read this instead of the full
-        ``live()`` materialization."""
+        ``live()`` materialization. ``copy=False`` mirrors ``live()``:
+        an arena slice view on the all-alive fast path, for consumers
+        that materialize immediately (the sharded merge)."""
         n = len(self.slot_map)
-        return self.paths[:n][self.alive[:n]]
+        mask = self.alive[:n]
+        if mask.all():
+            return self.paths[:n].copy() if copy else self.paths[:n]
+        return self.paths[:n][mask]
 
     def get_record(self, path: str, keys: Sequence[str] = (
             "uid", "gid", "size", "mtime")) -> Optional[Dict[str, float]]:
@@ -441,12 +535,29 @@ class AggregateIndex:
     def from_sketch_state(self, cfg, state: Dict, names: Sequence[str],
                           attrs=("size", "atime", "ctime", "mtime"),
                           qs=(0.10, 0.25, 0.50, 0.75, 0.90, 0.99),
-                          only: Optional[Sequence[int]] = None) -> None:
+                          only: Optional[Sequence[int]] = None,
+                          counts: Optional[np.ndarray] = None) -> None:
         """(Re)publish summaries from a (P, A, NB) device sketch state.
 
         ``only`` restricts publication to the given principal indices —
         the event-ingestion hot path refreshes just the principals an
         event batch touched instead of all P of them (paper §IV-B3).
+
+        ``counts`` optionally supplies EXACT live-object counts per
+        principal (shape (P,) — the event ingestor's delta-maintained
+        matrix summed over crc32 shards). When given it overrides the
+        sketch's additive-only count in published ``file_count`` fields,
+        and principals whose count is zero are REMOVED from ``records``
+        rather than left to linger: deleting a principal's last record
+        must not leave a ghost summary for ``directories_over`` /
+        ``per_user_usage`` to report. A FULL republication
+        (``only=None``) also removes zero-count principals — the state
+        speaks for every principal there. A PARTIAL refresh without
+        exact counts does NOT remove: its sketch state may be blind to
+        records another ingest path loaded (e.g. an event ingestor's
+        state vs snapshot-loaded records), so a zero there only means
+        "nothing observed here", and the existing record is left as the
+        documented bounded-staleness survivor (DESIGN.md §6.2).
         """
         if only is not None:
             sel = np.asarray(list(only), np.int64)
@@ -466,11 +577,26 @@ class AggregateIndex:
                     None if padded is None else jnp.asarray(padded)
                 ).items()}
         quants = summ["quantiles"]                   # (P', A, Q)
+        authoritative = counts is not None or only is None
         for row, p in enumerate(idx):
             name = names[int(p)]
-            if float(summ["count"][row, 0]) <= 0:
+            cnt = (float(counts[int(p)]) if counts is not None
+                   else float(summ["count"][row, 0]))
+            if cnt <= 0:
+                if authoritative:
+                    self.records.pop(name, None)   # no live records: no ghost
                 continue
-            content = {"file_count": float(summ["count"][row, 0])}
+            if float(summ["count"][row, 0]) <= 0:
+                # exact count says live records exist, but THIS sketch
+                # never observed them (attrs of snapshot-loaded records
+                # live in the snapshot pipeline's state, not the event
+                # ingestor's): refresh the count on the existing record
+                # rather than publish inf/nan stats from an empty row
+                got = self.records.get(name)
+                if got is not None:
+                    got["file_count"] = cnt
+                continue
+            content = {"file_count": cnt}
             for ai, attr in enumerate(attrs):
                 content[attr] = {
                     "min": float(summ["min"][row, ai]),

@@ -152,8 +152,12 @@ class Monitor:
         out = {"events": n_events, "seconds": dt,
                "events_per_s": n_events / max(dt, 1e-9), **self.metrics}
         if self.ingestor is not None:
-            out["watermark_seq"] = self.ingestor.freshness()["applied_seq"]
-            out["pending_events"] = self.ingestor.freshness()["pending_events"]
+            fr = self.ingestor.freshness()
+            out["watermark_seq"] = fr["applied_seq"]
+            out["pending_events"] = fr["pending_events"]
+            # 0.0 until an anti-entropy pass runs (core/reconcile.py) —
+            # or on duck-typed ingestors predating the mark
+            out["reconciled_at"] = fr.get("reconciled_at", 0.0)
         return out
 
 
@@ -196,4 +200,5 @@ class MonitorPool:
         if fr is not None:
             out["watermark_seq"] = fr["applied_seq"]
             out["pending_events"] = fr["pending_events"]
+            out["reconciled_at"] = fr.get("reconciled_at", 0.0)
         return out

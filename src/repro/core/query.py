@@ -46,21 +46,43 @@ def merge_freshness(marks: Sequence[Dict[str, float]]
         "pending_events": sum(m["pending_events"] for m in marks),
         "staleness_s": max(m["staleness_s"] for m in marks),
         "applied_batches": sum(m.get("applied_batches", 0) for m in marks),
+        # a deployment is only as reconciled as its LEAST-recently
+        # reconciled partition (0.0 = some partition never was)
+        "reconciled_at": min(m.get("reconciled_at", 0.0) for m in marks),
         "sources": len(marks),
     }
 
 
 class QueryEngine:
     def __init__(self, primary: PrimaryIndex, aggregate: AggregateIndex,
-                 now: float = 1.7e9, ingestor=None):
+                 now=None, ingestor=None):
         """``ingestor``: optional event_ingest.EventIngestor (duck-typed —
         anything with ``freshness()``) whose watermark stamps results. A
         list/tuple of ingestors (e.g. one per MDT feeding a sharded
-        primary) min-merges into one watermark via merge_freshness."""
+        primary) min-merges into one watermark via merge_freshness.
+
+        ``now``: the clock the time-window predicates
+        (``not_accessed_since`` / ``large_cold_files`` /
+        ``past_retention``) evaluate against. Default None means
+        ``time.time`` read PER QUERY — a long-lived engine must not
+        freeze its notion of "now" at construction, or cold-data windows
+        silently drift stale. Pass a float to pin a deterministic clock
+        (tests, replaying historical scans) or any callable to supply
+        your own."""
         self.primary = primary
         self.aggregate = aggregate
-        self.now = now
+        self._now = time.time if now is None else now
         self.ingestor = ingestor
+
+    @property
+    def now(self) -> float:
+        """The query clock: re-read per access when callable-backed."""
+        n = self._now
+        return float(n()) if callable(n) else float(n)
+
+    @now.setter
+    def now(self, value) -> None:
+        self._now = value
 
     # -- freshness (paper's consistency/latency/freshness knobs) --------------
 
@@ -118,11 +140,14 @@ class QueryEngine:
         return live["path"][m]
 
     def duplicate_candidates(self) -> Dict[int, np.ndarray]:
-        """GROUP BY checksum HAVING count > 1 (path_hash as stand-in
-        checksum column)."""
+        """GROUP BY checksum HAVING count > 1 (``path_hash`` as the
+        stand-in checksum column), keyed by the hash value. Same-size
+        files with different hashes are NOT candidates — grouping by
+        ``size`` here was a bug that flooded the report on any corpus
+        with repeated sizes."""
         live = self.primary.live()
-        sizes = live["size"].astype(np.int64)
-        uniq, inv, counts = np.unique(sizes, return_inverse=True,
+        hashes = live["path_hash"].astype(np.int64)
+        uniq, inv, counts = np.unique(hashes, return_inverse=True,
                                       return_counts=True)
         out = {}
         for ui in np.nonzero(counts > 1)[0]:

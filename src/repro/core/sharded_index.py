@@ -255,6 +255,7 @@ class ShardedPrimaryIndex:
         self.n_shards = n_shards
         self.kernel_route_min = kernel_route_min
         self.route_width = route_width
+        self.slot_map_factory = slot_map_factory
         self.shards: List[PrimaryIndex] = [
             PrimaryIndex(slot_map=slot_map_factory())
             for _ in range(n_shards)]
@@ -419,14 +420,38 @@ class ShardedPrimaryIndex:
     def invalidate_older(self, version: int) -> int:
         return sum(sh.invalidate_older(version) for sh in self.shards)
 
+    def slot_stats(self) -> Dict[str, float]:
+        """Deployment-wide arena occupancy (per-shard stats summed; the
+        dead fraction is over ALL assigned slots)."""
+        per = [sh.slot_stats() for sh in self.shards]
+        n = sum(p["slots"] for p in per)
+        live = sum(p["live"] for p in per)
+        return {"slots": n, "live": live, "dead": n - live,
+                "dead_fraction": (n - live) / n if n else 0.0}
+
+    def compact(self, threshold: float = 0.0) -> int:
+        """Compact every shard whose dead-slot fraction exceeds
+        ``threshold`` (DESIGN.md §9.2) — compaction is naturally
+        per-shard, so a deployment reclaims its hottest-churning
+        partitions without rewriting the rest. Each shard's slot map is
+        rebuilt through this index's ``slot_map_factory``. Returns total
+        slots reclaimed."""
+        return sum(
+            sh.compact(slot_map_factory=self.slot_map_factory)
+            for sh in self.shards
+            if sh.slot_stats()["dead_fraction"] > threshold)
+
     # -- reads (scatter-gather) -----------------------------------------------
 
     def live(self) -> Dict[str, np.ndarray]:
         """Gather: per-shard ``live()`` views merged into one
         schema-stable dict (row order is shard-major; queries treat rows
         as a set). Columns only some shards carry are zero-filled
-        elsewhere, mirroring the monolith's sparse-column rule."""
-        views = [sh.live() for sh in self.shards]
+        elsewhere, mirroring the monolith's sparse-column rule.
+        Per-shard views are taken copy-free (``live(copy=False)``): the
+        concatenate below materializes them, so compacted shards feed
+        the merge straight from their arenas."""
+        views = [sh.live(copy=False) for sh in self.shards]
         counts = [len(v["path"]) for v in views]
         keys = {}
         for v in views:
@@ -440,7 +465,8 @@ class ShardedPrimaryIndex:
         return out
 
     def live_paths(self) -> np.ndarray:
-        return np.concatenate([sh.live_paths() for sh in self.shards])
+        return np.concatenate([sh.live_paths(copy=False)
+                               for sh in self.shards])
 
     def get_record(self, path: str, keys: Sequence[str] = (
             "uid", "gid", "size", "mtime")) -> Optional[Dict[str, float]]:

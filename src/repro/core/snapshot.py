@@ -128,6 +128,21 @@ def split_table_by_shard(table: md.MetadataTable, n_shards: int
             for s in range(n_shards)]
 
 
+def index_columns(table: md.MetadataTable
+                  ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+    """(paths, columns) of the files-only view cast to the primary
+    index's storage dtypes (``PrimaryIndex.STANDARD_COLUMNS``) — the
+    canonical scan → index column view shared by snapshot ingest and the
+    anti-entropy reconciler (DESIGN.md §9.1). Diffing in storage dtype
+    matters: a float64 scan value that round-trips to the float32 the
+    arena holds is NOT drift."""
+    from repro.core.index import PrimaryIndex
+    files = md.files_only(table)
+    cols = {k: np.asarray(getattr(files, k), dt)
+            for k, dt in PrimaryIndex.STANDARD_COLUMNS.items()}
+    return files.paths, cols
+
+
 def pad_rows(rows: Dict[str, np.ndarray], multiple: int) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
     n = len(rows["uid_slot"])
     m = -(-n // multiple) * multiple

@@ -1,4 +1,5 @@
-"""Differential oracle for event ingestion (ISSUE 2 satellite).
+"""Differential oracle for event ingestion (ISSUE 2 satellite) and for
+snapshot reconciliation + tombstone compaction (ISSUE 3).
 
 Replay a random event suffix through the EventIngestor — on top of a
 snapshot of the prefix state — and require the resulting primary-index
@@ -8,6 +9,14 @@ subject) to a from-scratch snapshot rebuild of the same final tree.
 Runs the full matrix: eager and buffered consistency modes x monolithic
 PrimaryIndex and ShardedPrimaryIndex at 1, 3, and 8 shards x replay
 from scratch and from a mid-stream snapshot handoff.
+
+The reconcile legs harden the same oracle against a LOSSY feed: a
+random subset of events is dropped on the floor before ingestion, then
+``reconcile`` runs against a fresh snapshot of the true final tree —
+the repaired index must be byte-identical to the rebuild, across the
+same mode x shard matrix. The compaction leg requires compaction to
+change nothing observable (live state, versions, watermark, query
+results) while zeroing the dead-slot count.
 
 The oracle is a per-event reference state machine whose merge rules
 mirror the ingestor's coalescer for stat-carrying (GPFS-style) events:
@@ -28,6 +37,8 @@ from repro.core import snapshot as snap
 from repro.core.event_ingest import EventIngestor, IngestConfig
 from repro.core.index import AggregateIndex, PrimaryIndex
 from repro.core.metadata import MetadataTable, path_hash
+from repro.core.query import QueryEngine
+from repro.core.reconcile import compact_if_needed, reconcile
 from repro.core.sharded_index import ShardedPrimaryIndex
 
 PCFG = snap.PipelineConfig(n_users=8, n_groups=4, n_dirs=16)
@@ -261,6 +272,98 @@ def test_differential_seed_sweep_sharded_eager(seed):
     """Extra randomized sweeps on the sharded config that exercises
     cross-shard rename migration hardest."""
     run_differential("eager", 3, split_frac=0.5, seed=seed)
+
+
+def run_reconcile_differential(mode, n_shards, drop_frac, seed, n_ops=350):
+    """Lossy-feed leg: drop a random subset of events before ingesting,
+    then reconcile against a fresh snapshot of the true final tree and
+    require byte-identity with a from-scratch rebuild."""
+    stream = ev.EventStream(start_fid=1)
+    gen_workload(stream, n_ops, seed)
+    names = {0: "fs", **stream.names}
+    batches = []
+    while len(stream):
+        batches.append(stream.take(64))
+
+    ref = RefState(names)
+    primary = make_primary(n_shards)
+    ing = EventIngestor(
+        IngestConfig(mode=mode, pad_to=64, max_buffer_events=150,
+                     freshness_window=1e9, update_aggregates=False),
+        PCFG, primary, AggregateIndex(), names=names)
+    rng = np.random.default_rng(seed * 31 + 7)
+    max_seq = 0
+    dropped = 0
+    for b in batches:
+        ref.apply_batch(b)                   # the true history
+        max_seq = max(max_seq, int(b["seq"].max()))
+        keep = rng.random(len(b["seq"])) >= drop_frac
+        dropped += int((~keep).sum())
+        kept = {k: v[keep] for k, v in b.items()}
+        if len(kept["seq"]):
+            ing.ingest(kept)                 # the lossy feed
+    ing.flush()
+    assert dropped > 0
+
+    report = reconcile(ref.table(), version=max_seq, ingestor=ing)
+    rebuilt = make_primary(n_shards)
+    rebuilt.ingest_table(ref.table(), version=1)
+    ctx = f"mode={mode} shards={n_shards} drop={drop_frac} seed={seed}"
+    assert_byte_identical(primary.live(), rebuilt.live(), ctx)
+    assert ing.freshness()["applied_seq"] == max_seq, ctx
+    assert ing.freshness()["reconciled_at"] > 0, ctx
+    return report
+
+
+@pytest.mark.parametrize("mode", ["eager", "buffered"])
+@pytest.mark.parametrize("n_shards", [None, 1, 3, 8])
+def test_dropped_events_reconcile_matches_rebuild(mode, n_shards):
+    """A 25%-lossy feed converges to the snapshot state after one
+    anti-entropy pass, for the full mode x shard matrix."""
+    rep = run_reconcile_differential(mode, n_shards, drop_frac=0.25,
+                                     seed=13)
+    assert rep.repairs > 0                   # the drops really drifted it
+
+
+def test_everything_dropped_reconcile_equals_bulk_load():
+    """Degenerate drift: the feed lost every event. Reconcile must
+    rebuild the full state through repair batches alone."""
+    rep = run_reconcile_differential("eager", 3, drop_frac=1.0, seed=3)
+    assert rep.creates == rep.checked
+
+
+@pytest.mark.parametrize("n_shards", [None, 3])
+def test_compaction_preserves_state_and_watermark(n_shards):
+    """Compacting after event churn changes nothing observable: live
+    view byte-identical, per-record versions kept, watermark untouched,
+    spot queries unchanged — only the dead slots disappear."""
+    stream = ev.EventStream(start_fid=1)
+    gen_workload(stream, 300, seed=29)
+    names = {0: "fs", **stream.names}
+    primary = make_primary(n_shards)
+    t = {"now": 7.0}
+    ing = EventIngestor(
+        IngestConfig(mode="eager", pad_to=64, update_aggregates=False),
+        PCFG, primary, AggregateIndex(), names=names,
+        clock=lambda: t["now"])
+    while len(stream):
+        ing.ingest(stream.take(64))
+    stats = primary.slot_stats()
+    assert stats["dead"] > 0                 # the workload deletes ~13%
+    live_before = primary.live()
+    fresh_before = ing.freshness()
+    sample = list(live_before["path"][:20])
+    vers_before = [primary.lookup(p)["version"] for p in sample]
+
+    reclaimed = compact_if_needed(primary, threshold=0.0, ingestor=ing)
+    assert reclaimed == stats["dead"]
+    assert primary.slot_stats()["dead"] == 0
+    assert_byte_identical(primary.live(), live_before,
+                          f"compaction shards={n_shards}")
+    assert [primary.lookup(p)["version"] for p in sample] == vers_before
+    assert ing.freshness() == fresh_before   # watermark untouched
+    q = QueryEngine(primary, AggregateIndex(), now=1.7e9, ingestor=ing)
+    assert sorted(q.find_by_name(r"f\d+$")) == sorted(live_before["path"])
 
 
 def test_sharded_equals_monolith_after_replay():

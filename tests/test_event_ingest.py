@@ -256,6 +256,27 @@ def test_recreate_after_delete_counts_again():
     np.testing.assert_allclose(ing.counts, reference_counts(prim))
 
 
+def test_chown_moves_counts_between_principals():
+    """An ownership change on a live record must MOVE its count to the
+    new principal — enter/leave deltas alone strand it on the old owner
+    (and would let exact-count republication ghost-drop a principal
+    that still owns files)."""
+    ing, prim, agg = make_ingestor()
+    s = ev.EventStream(start_fid=1)
+    f = s.alloc_fid()
+    s.emit(ev.E_CREAT, f, 0, has_stat=1, size=10.0, uid=1, gid=1,
+           name=f"f{f}")
+    ing.ingest(s.take(), names=s.names)
+    s.emit(ev.E_SATTR, f, 0, has_stat=1, size=10.0, uid=2, gid=2)
+    ing.ingest(s.take())
+    live = prim.live()
+    assert int(live["uid"][0]) == 2
+    np.testing.assert_allclose(ing.counts, reference_counts(prim))
+    s.emit(ev.E_UNLNK, f, 0)             # -1 lands on the NEW owner
+    ing.ingest(s.take())
+    np.testing.assert_allclose(ing.counts, np.zeros_like(ing.counts))
+
+
 def test_file_rename_moves_subject():
     """A FILE rename (not just a dir rename) must tombstone the old
     subject and index the new one — no duplicate live records, counts

@@ -145,3 +145,25 @@ def test_hierarchy_path_hash_matches_host():
 
     for i in range(6):
         assert got[i] == host_hash(i), i
+
+
+def test_monitor_tolerates_duck_typed_ingestor_freshness():
+    """Monitor.run's ingestor is duck-typed ('anything with
+    freshness()'): a minimal ingestor whose watermark predates the
+    reconciled_at mark must not crash the run-metrics read."""
+    class MinimalIngestor:
+        def ingest(self, batch, names=None):
+            return {"applied": len(batch["fid"]), "pending": 0}
+
+        def freshness(self):
+            return {"mode": "eager", "applied_seq": 7,
+                    "pending_events": 0, "staleness_s": 0.0}
+
+    s = ev.EventStream(start_fid=1)
+    f = s.alloc_fid()
+    s.emit(ev.E_CREAT, f, 0, has_stat=1, size=1.0, name=f"f{f}")
+    mon = Monitor(MonitorConfig(max_fids=512, batch_size=64),
+                  ingestor=MinimalIngestor())
+    out = mon.run(s)
+    assert out["watermark_seq"] == 7
+    assert out["reconciled_at"] == 0.0

@@ -1,0 +1,98 @@
+"""Query-layer correctness regressions (ISSUE 3 satellites).
+
+- ``duplicate_candidates`` must GROUP BY the stand-in checksum column
+  (``path_hash``), keyed by hash — grouping by ``size`` flooded the
+  report with same-size/different-content files.
+- ``QueryEngine.now`` must track a clock, not freeze at construction:
+  a long-lived engine's cold-data / retention windows otherwise
+  evaluate against a stale "now" forever.
+"""
+import time
+
+import numpy as np
+
+from repro.core.index import AggregateIndex, PrimaryIndex
+from repro.core.metadata import path_hash, synth_filesystem
+from repro.core.query import QueryEngine
+
+# a real FNV-1a 32-bit collision (verified below): the stand-in
+# "identical checksum" pair for the positive grouping case
+COLLIDE_A = "/fs/d21/f398303"
+COLLIDE_B = "/fs/d47/f485241"
+
+
+def put(idx, paths, sizes, version=1, atime=None):
+    n = len(paths)
+    fields = {
+        "path_hash": np.array([path_hash(p) for p in paths], np.uint32),
+        "size": np.asarray(sizes, np.float32),
+    }
+    if atime is not None:
+        fields["atime"] = np.asarray(atime, np.float32)
+    idx.upsert_batch(list(paths), fields, np.full(n, version, np.int64))
+
+
+def test_duplicate_candidates_groups_by_hash_not_size():
+    """Same-size files with DIFFERENT hashes are not duplicates; files
+    with the SAME hash are one group keyed by the hash — even when
+    their sizes differ (a checksum match is the candidate signal, the
+    size column is irrelevant to it)."""
+    assert path_hash(COLLIDE_A) == path_hash(COLLIDE_B)   # pair is real
+    idx = PrimaryIndex()
+    # four same-size files, all distinct hashes: the old GROUP BY size
+    # reported them all as one bogus duplicate group
+    put(idx, [f"/fs/same/s{i}" for i in range(4)], [4096.0] * 4)
+    q = QueryEngine(idx, AggregateIndex(), now=1.7e9)
+    assert q.duplicate_candidates() == {}
+
+    put(idx, [COLLIDE_A, COLLIDE_B], [111.0, 222.0])      # sizes differ
+    dup = q.duplicate_candidates()
+    assert set(dup) == {path_hash(COLLIDE_A)}
+    assert sorted(dup[path_hash(COLLIDE_A)]) == [COLLIDE_A, COLLIDE_B]
+
+
+def test_duplicate_candidates_excludes_tombstoned_rows():
+    idx = PrimaryIndex()
+    put(idx, [COLLIDE_A, COLLIDE_B], [1.0, 2.0])
+    idx.delete_batch([COLLIDE_B], np.array([2]))
+    q = QueryEngine(idx, AggregateIndex(), now=1.7e9)
+    assert q.duplicate_candidates() == {}
+
+
+def test_now_tracks_clock_in_long_lived_engine():
+    """With a callable clock, the cold-data window moves as time does:
+    the same engine returns different (correct) results later."""
+    idx = PrimaryIndex()
+    put(idx, ["/fs/hot", "/fs/cold"], [1.0, 1.0],
+        atime=[1000.0, 100.0])
+    t = {"now": 1050.0}
+    q = QueryEngine(idx, AggregateIndex(), now=lambda: t["now"])
+    assert q.now == 1050.0
+    # at t=1050, only /fs/cold is idle > 500s
+    assert sorted(q.not_accessed_since(500)) == ["/fs/cold"]
+    assert sorted(q.large_cold_files(0.5, 500)) == ["/fs/cold"]
+    t["now"] = 2000.0                 # both now idle > 500s
+    assert sorted(q.not_accessed_since(500)) == ["/fs/cold", "/fs/hot"]
+    assert sorted(q.past_retention(500)) == ["/fs/cold", "/fs/hot"]
+
+
+def test_now_fixed_float_stays_deterministic():
+    """The float override pins the clock for tests / historical
+    replays, exactly as before the fix."""
+    fs = synth_filesystem(300, n_dirs=30, seed=0, now=1.7e9)
+    idx = PrimaryIndex()
+    idx.ingest_table(fs, 1)
+    q = QueryEngine(idx, AggregateIndex(), now=1.7e9)
+    assert q.now == 1.7e9
+    first = sorted(q.not_accessed_since(90 * 86400))
+    time.sleep(0.01)
+    assert sorted(q.not_accessed_since(90 * 86400)) == first
+    q.now = 1.7e9 + 400 * 86400       # reassignment still works
+    assert len(q.not_accessed_since(90 * 86400)) >= len(first)
+
+
+def test_now_defaults_to_wallclock():
+    q = QueryEngine(PrimaryIndex(), AggregateIndex())
+    before = time.time()
+    got = q.now
+    assert before - 1.0 <= got <= time.time() + 1.0
