@@ -19,6 +19,7 @@ BENCHES = [
     ("event_ingest", "benchmarks.bench_event_ingest"),
     ("sharded_index", "benchmarks.bench_sharded"),
     ("reconcile", "benchmarks.bench_reconcile"),
+    ("durable_pipeline", "benchmarks.bench_durable_pipeline"),
     ("fig3_5_scaling", "benchmarks.bench_scaling"),
     ("table1_queries", "benchmarks.bench_index_query"),
     ("roofline", "benchmarks.bench_roofline"),

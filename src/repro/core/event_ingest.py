@@ -59,7 +59,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -69,7 +69,7 @@ from repro.core import events as ev
 from repro.core import metadata as md
 from repro.core import snapshot as snap
 from repro.core.index import (AggregateIndex, PrimaryIndex, bucket_pow2,
-                              pad_1d)
+                              pack_array, pad_1d, unpack_array)
 from repro.core.sketches import ddsketch as dds
 
 MODES = ("eager", "buffered")
@@ -188,6 +188,11 @@ class EventIngestor:
         self.aggregate = aggregate
         self.clock = clock
         self.watermark = Watermark(last_apply_time=clock())
+        #: optional () -> int: events durably produced but not yet
+        #: committed behind this ingestor (the durable pipeline's
+        #: consumer lag, core/stream_pipeline.py) — surfaced in
+        #: freshness() as ``log_lag`` next to the watermark
+        self.lag_source: Optional[Callable[[], int]] = None
         self.metrics = {"events_in": 0, "applied": 0, "upserts": 0,
                         "tombstones": 0, "cancelled": 0, "repathed": 0,
                         "applies": 0, "sketch_rows": 0, "unresolved": 0,
@@ -381,7 +386,16 @@ class EventIngestor:
             only=ids, counts=self._exact_counts())
 
     def freshness(self) -> Dict[str, float]:
-        """The watermark readers attach to results (DESIGN.md §6.3)."""
+        """The watermark readers attach to results (DESIGN.md §6.3).
+
+        ``log_lag`` counts log RECORDS (payloads — micro-batch slices,
+        Kafka-style consumer lag, NOT single events like
+        ``pending_events``) durably in the log but not yet committed
+        behind this ingestor (0 for direct-fed deployments): with
+        commit-after-apply it bounds how much replay a crash-restart
+        would re-run, and for readers it is the freshness gap BEYOND
+        ``pending_events`` — records the broker holds that this index
+        has not even buffered yet (DESIGN.md §10.4)."""
         return {
             "mode": self.cfg.mode,
             "applied_seq": self.watermark.applied_seq,
@@ -390,7 +404,76 @@ class EventIngestor:
                                - self.watermark.last_apply_time),
             "applied_batches": self.watermark.applied_batches,
             "reconciled_at": self.watermark.reconciled_at,
+            "log_lag": int(self.lag_source()) if self.lag_source else 0,
         }
+
+    # -- checkpoint / restore (DESIGN.md §10.3) -------------------------------
+
+    def state_dict(self) -> Dict:
+        """Serializable ingestor state: the fid-keyed state-manager
+        tables, the device sketch state, the exact counting matrix, and
+        the watermark. Together with the primary index's ``state_dict``
+        this is everything crash recovery needs to resume the stream —
+        restore + replay of the post-barrier suffix reproduces the
+        uninterrupted run byte-for-byte. Buffered events are NOT
+        serialized: callers flush first (the durable pipeline's
+        checkpoint barrier is an applied-state barrier)."""
+        assert not self._buffer, "flush() before state_dict()"
+        return {
+            "watermark": {
+                "applied_seq": int(self.watermark.applied_seq),
+                "applied_batches": int(self.watermark.applied_batches),
+                "reconciled_at": float(self.watermark.reconciled_at),
+            },
+            "metrics": {k: int(v) for k, v in self.metrics.items()},
+            "name": {int(k): v for k, v in self._name.items()},
+            "parent": {int(k): int(v) for k, v in self._parent.items()},
+            "children": {int(k): sorted(int(c) for c in v)
+                         for k, v in self._children.items()},
+            "stat": {int(k): {kk: (float(vv) if kk not in ("uid", "gid")
+                                   else int(vv)) for kk, vv in st.items()}
+                     for k, st in self._stat.items()},
+            "is_dir": sorted(int(k) for k, v in self._is_dir.items() if v),
+            "sketch": {k: pack_array(v)
+                       for k, v in self._sketch_state.items()},
+            "counts": pack_array(self.counts),
+            "counts_seeded": self._counts_seeded,
+            "tree_registered": self._tree_registered,
+        }
+
+    def load_state(self, state: Dict) -> None:
+        """Restore ``state_dict`` output in place. The ingestor must be
+        constructed with the same (cfg, pcfg) shape universe; the
+        primary/aggregate indexes are restored separately (they carry
+        their own state)."""
+        wm = state["watermark"]
+        self.watermark = Watermark(
+            applied_seq=int(wm["applied_seq"]),
+            applied_batches=int(wm["applied_batches"]),
+            reconciled_at=float(wm["reconciled_at"]),
+            last_apply_time=self.clock())
+        self.metrics.update(state["metrics"])
+        self._name = {int(k): v for k, v in state["name"].items()}
+        self._parent = {int(k): int(v) for k, v in state["parent"].items()}
+        self._children = {int(k): set(v)
+                          for k, v in state["children"].items()}
+        self._stat = {int(k): dict(st) for k, st in state["stat"].items()}
+        self._is_dir = {int(k): True for k in state["is_dir"]}
+        self._sketch_state = {k: jnp.asarray(unpack_array(v))
+                              for k, v in state["sketch"].items()}
+        counts = unpack_array(state["counts"])
+        assert counts.shape == self.counts.shape, \
+            (counts.shape, self.counts.shape)
+        self.counts = counts
+        self._counts_seeded = bool(state["counts_seeded"])
+        self._tree_registered = bool(state["tree_registered"])
+        self._buffer, self._buffered = [], 0
+        self._first_buffer_ts = None
+        # aggregate records are derived state (not serialized):
+        # republish every principal from the restored sketch + counts so
+        # readers see summaries immediately after a restore
+        if self.cfg.update_aggregates:
+            self.republish(range(self.pcfg.n_principals))
 
     # -- the apply pipeline ---------------------------------------------------
 
@@ -412,8 +495,9 @@ class EventIngestor:
 
         # rename override: snapshot OLD paths of live descendants BEFORE
         # the fact fold moves the subtree (paper §IV-B2 rule 3)
-        renamed_dirs = facts["fid"][facts["renamed"] & facts["is_dir"]]
-        old_desc = self._live_descendant_paths(renamed_dirs)
+        ren_dirs_sel = facts["renamed"] & facts["is_dir"]
+        old_desc = self._live_descendant_paths(
+            facts["fid"][ren_dirs_sel], facts["seq"][ren_dirs_sel])
         # stats + subjects of to-be-deleted fids, read before the fold:
         # the tombstone must hit the path the record is indexed under
         # (pre-rename), and the counting decrement needs the old slots
@@ -463,7 +547,38 @@ class EventIngestor:
         up = facts["alive"] & ~facts["is_dir"]
         up_fids = facts["fid"][up]
         up_paths = [resolve(int(f)) for f in up_fids]
-        up_vers = facts["seq"][up]
+        up_vers = facts["seq"][up].copy()
+        # chunk-invariant versions: a subject under a dir renamed IN THIS
+        # batch carries the rename's seq when newer than its own last
+        # event — exactly the version the repath override would stamp if
+        # the rename had arrived in a later batch. Without this, the
+        # durable pipeline's replay (which re-chunks the stream) could
+        # recover records at different versions than the uninterrupted
+        # run (DESIGN.md §10.2).
+        ren_seq_of = {int(f): int(s) for f, s in
+                      zip(facts["fid"][ren_dirs_sel],
+                          facts["seq"][ren_dirs_sel])}
+        if ren_seq_of:
+            memo_rs: Dict[int, int] = {}
+
+            def anc_rename_seq(d: int) -> int:
+                chain = []
+                best = 0
+                on_walk = set()
+                while d >= 0 and d not in memo_rs and d not in on_walk:
+                    on_walk.add(d)
+                    chain.append(d)
+                    d = self._parent.get(d, -1)
+                best = memo_rs.get(d, 0) if d >= 0 else 0
+                for c in reversed(chain):
+                    best = max(best, ren_seq_of.get(c, 0))
+                    memo_rs[c] = best
+                return best
+
+            for i, f in enumerate(up_fids):
+                rs = anc_rename_seq(self._parent.get(int(f), -1))
+                if rs > up_vers[i]:
+                    up_vers[i] = rs
         # columns from the MERGED fact tables (a sparse batch inherits the
         # fields it didn't carry from earlier events / the stored record)
         up_stats = [self._stat.get(int(f), {}) for f in up_fids]
@@ -474,11 +589,9 @@ class EventIngestor:
         up_mtime = np.array([s.get("mtime", 0.0) for s in up_stats],
                             np.float32)
 
-        rename_seq = int(facts["seq"].max()) if len(facts["seq"]) else 0
         dead_in_batch = frozenset(
             int(f) for f in facts["fid"][facts["dead"] | facts["cancelled"]])
-        re_paths, re_fields = self._repath(old_desc, resolve, rename_seq,
-                                           dead_in_batch)
+        re_paths, re_fields = self._repath(old_desc, resolve, dead_in_batch)
 
         # primary index: vectorized columnar upserts + tombstones
         fields = {
@@ -514,7 +627,7 @@ class EventIngestor:
             count_jobs.append((mv_paths, up_uid[moved_own],
                                up_gid[moved_own], +1.0, sel))
         if re_paths:
-            re_vers = np.full(len(re_paths["new"]), rename_seq, np.int64)
+            re_vers = np.asarray(re_paths["vers"], np.int64)
             re_new = self.primary.upsert_batch(re_paths["new"], re_fields,
                                                re_vers)
             re_dead = self.primary.delete_batch(re_paths["old"], re_vers)
@@ -742,27 +855,36 @@ class EventIngestor:
             if d:
                 self._is_dir[f] = True
 
-    def _live_descendant_paths(self, dir_fids: np.ndarray) -> Dict[int, str]:
-        """Old subjects of every FILE under the given dirs, resolved
-        against the pre-rename tree. Includes files known only through
+    def _live_descendant_paths(self, dir_fids: np.ndarray,
+                               dir_seqs: np.ndarray
+                               ) -> Dict[int, Tuple[str, int]]:
+        """Old subjects of every FILE under the given renamed dirs,
+        resolved against the pre-rename tree, each tagged with the seq
+        of the rename that moves it (the max over its renamed ancestors
+        — that PER-EVENT seq is the repath's version, so replaying the
+        same events in different batch groupings lands identical
+        versions: the durable pipeline's chunk-invariance contract,
+        DESIGN.md §10.2). Includes files known only through
         ``register_tree`` (no event-derived stat yet) — their index
         record is the source of truth at repath time."""
         if len(dir_fids) == 0:
             return {}
         resolve = self._make_resolver()
-        out: Dict[int, str] = {}
-        stack = [int(f) for f in dir_fids]
-        seen = set()
+        out: Dict[int, Tuple[str, int]] = {}
+        stack = [(int(f), int(s)) for f, s in zip(dir_fids, dir_seqs)]
+        seen: Dict[int, int] = {}
         while stack:
-            d = stack.pop()
-            if d in seen:
+            d, seq = stack.pop()
+            if seen.get(d, -1) >= seq:
                 continue
-            seen.add(d)
+            seen[d] = seq
             for c in self._children.get(d, ()):
                 if self._is_dir.get(c):
-                    stack.append(c)
+                    stack.append((c, seq))
                 else:
-                    out[c] = resolve(c)
+                    got = out.get(c)
+                    out[c] = (resolve(c) if got is None else got[0],
+                              seq if got is None else max(got[1], seq))
         return out
 
     def _record_fields(self, path: str) -> Optional[Dict[str, float]]:
@@ -775,16 +897,18 @@ class EventIngestor:
         return self.primary.get_record(
             path, keys=("uid", "gid", "size", "mtime", "atime", "ctime"))
 
-    def _repath(self, old_desc: Dict[int, str],
-                resolve: Callable[[int], str], version: int,
+    def _repath(self, old_desc: Dict[int, Tuple[str, int]],
+                resolve: Callable[[int], str],
                 dead_in_batch: frozenset):
         """Rename override on the index: move descendants whose subject
         changed (old tombstone + new upsert carrying the stored stat, or
-        the indexed record's own fields for register_tree-only fids)."""
+        the indexed record's own fields for register_tree-only fids).
+        Each move carries the triggering rename's OWN seq as its version
+        (``old_desc`` values are (old_path, rename_seq))."""
         if not old_desc:
             return {}, {}
-        olds, news, stats = [], [], []
-        for f, old_path in old_desc.items():
+        olds, news, stats, vers = [], [], [], []
+        for f, (old_path, seq) in old_desc.items():
             if f in dead_in_batch:      # deleted in this same batch
                 continue
             st = self._stat.get(f) or self._record_fields(old_path)
@@ -796,6 +920,7 @@ class EventIngestor:
             olds.append(old_path)
             news.append(new_path)
             stats.append(st)
+            vers.append(seq)
         if not news:
             return {}, {}
         mtimes = np.array([s.get("mtime", 0.0) for s in stats], np.float32)
@@ -814,7 +939,7 @@ class EventIngestor:
             "ctime": np.array([s.get("ctime", s.get("mtime", 0.0))
                                for s in stats], np.float32),
         }
-        return {"old": olds, "new": news}, fields
+        return {"old": olds, "new": news, "vers": vers}, fields
 
     # -- aggregate pipeline (device) -----------------------------------------
 

@@ -1,30 +1,74 @@
-"""Host-side partitioned event log — the Kafka/MSK analogue (DESIGN.md §2).
+"""Host-side partitioned event log — the Kafka/MSK analogue (DESIGN.md §2,
+§10).
 
 Topics with partitions, append offsets, and consumer groups: enough to
 model GPFS mmwatch fileset topics, the audit topic the primary pipeline
 publishes ingest-request IDs to, and the monitor's update-notification
 topic. Persistence (optional) uses msgpack+zstd segment files, giving the
 monitor crash-recovery of unconsumed events.
+
+Delivery semantics (DESIGN.md §10): offsets are ABSOLUTE (they survive
+truncation — each partition keeps a ``base`` offset marking how much was
+retired), and a consumer group can choose its commit discipline per
+``consume`` call:
+
+- ``commit=True`` (default, legacy): offsets advance at read time —
+  at-most-once; a crash between read and apply silently loses events.
+- ``commit=False`` + an explicit ``commit()`` after the downstream apply
+  succeeds — at-least-once; paired with the index's version-gated
+  idempotent replay this is the durable pipeline's exactly-once effect
+  (core/stream_pipeline.py).
+
+``truncate`` retires records behind a barrier (a checkpoint's consumed
+offsets), clamped so no registered group's committed position is ever
+truncated away.
 """
 from __future__ import annotations
 
 from typing import Any, Dict, List, Optional, Tuple
 
 import msgpack
-from repro.compat import zstd
+
+
+def _unpack(raw: bytes) -> Any:
+    # int map keys (fid -> name side tables) are legal payloads here
+    return msgpack.unpackb(raw, raw=False, strict_map_key=False)
 
 
 class Partition:
+    """One append-only segment with an absolute offset space. ``base`` is
+    the offset of ``records[0]``: truncation drops a prefix and advances
+    ``base``, so offsets committed by consumer groups stay valid."""
+
     def __init__(self):
         self.records: List[bytes] = []
+        self.base = 0
+
+    @property
+    def end(self) -> int:
+        """One past the last appended record (the next produce offset)."""
+        return self.base + len(self.records)
 
     def append(self, payload: Any) -> int:
         self.records.append(msgpack.packb(payload, use_bin_type=True))
-        return len(self.records) - 1
+        return self.end - 1
 
     def read(self, offset: int, max_n: int = 1024) -> List[Any]:
-        out = self.records[offset: offset + max_n]
-        return [msgpack.unpackb(r, raw=False) for r in out]
+        if offset < self.base:
+            raise ValueError(
+                f"offset {offset} is behind the truncation barrier "
+                f"{self.base}: those records were retired by a checkpoint")
+        lo = offset - self.base
+        return [_unpack(r) for r in self.records[lo: lo + max_n]]
+
+    def truncate(self, up_to: int) -> int:
+        """Retire records below absolute offset ``up_to``; returns how
+        many were dropped. Never moves backwards."""
+        drop = min(max(up_to - self.base, 0), len(self.records))
+        if drop:
+            self.records = self.records[drop:]
+            self.base += drop
+        return drop
 
     def __len__(self) -> int:
         return len(self.records)
@@ -34,68 +78,183 @@ class Topic:
     def __init__(self, name: str, n_partitions: int = 1):
         self.name = name
         self.partitions = [Partition() for _ in range(n_partitions)]
+        self._rr = 0                     # round-robin cursor for keyless produce
 
     def produce(self, payload: Any, key: Optional[int] = None) -> Tuple[int, int]:
-        p = (key if key is not None else 0) % len(self.partitions)
+        """Append to the partition ``key % n`` — or round-robin when no
+        key is given (keyless records must spread, not pile onto
+        partition 0: the hot-partition skew bug)."""
+        if key is None:
+            p = self._rr % len(self.partitions)
+            self._rr += 1
+        else:
+            p = key % len(self.partitions)
         off = self.partitions[p].append(payload)
         return p, off
+
+    @property
+    def end_offsets(self) -> List[int]:
+        return [p.end for p in self.partitions]
 
     def __len__(self) -> int:
         return sum(len(p) for p in self.partitions)
 
 
 class EventLog:
-    """Broker: topics + consumer-group offsets."""
+    """Broker: topics + consumer-group offsets (absolute, see Partition)."""
 
     def __init__(self):
         self.topics: Dict[str, Topic] = {}
         self.offsets: Dict[Tuple[str, str, int], int] = {}
+        # retention holds: (topic, holder) -> {partition: offset}. A
+        # commit-after-apply group's committed offsets acknowledge
+        # applies that are durable only at its next CHECKPOINT, so
+        # truncation must floor at the hold (the replay barrier), not at
+        # the committed offsets (see DurablePipeline.checkpoint).
+        self.holds: Dict[Tuple[str, str], Dict[int, int]] = {}
 
     def topic(self, name: str, n_partitions: int = 1) -> Topic:
         if name not in self.topics:
             self.topics[name] = Topic(name, n_partitions)
         return self.topics[name]
 
+    def _topic(self, name: str) -> Topic:
+        t = self.topics.get(name)
+        if t is None:
+            raise ValueError(
+                f"unknown topic {name!r} (known: {sorted(self.topics)})")
+        return t
+
+    def _partition(self, topic: str, partition: int) -> Partition:
+        t = self._topic(topic)
+        if not 0 <= partition < len(t.partitions):
+            raise ValueError(
+                f"topic {topic!r} has {len(t.partitions)} partitions; "
+                f"partition {partition} is out of range")
+        return t.partitions[partition]
+
+    def committed(self, topic: str, group: str, partition: int = 0) -> int:
+        """The group's committed offset — where a restarted consumer
+        resumes. Fresh groups start at the partition's truncation base."""
+        p = self._partition(topic, partition)
+        return self.offsets.get((topic, group, partition), p.base)
+
     def consume(self, topic: str, group: str, partition: int = 0,
-                max_n: int = 1024) -> List[Any]:
-        t = self.topics[topic]
+                max_n: int = 1024, commit: bool = True,
+                offset: Optional[int] = None) -> List[Any]:
+        """Read up to ``max_n`` records for ``group`` from ``partition``.
+
+        ``commit=True`` advances the group's offset at read time (legacy
+        at-most-once). ``commit=False`` reads from ``offset`` (default:
+        the committed position) WITHOUT moving it — the caller commits
+        explicitly after its apply succeeds (at-least-once)."""
+        p = self._partition(topic, partition)
         key = (topic, group, partition)
-        off = self.offsets.get(key, 0)
-        recs = t.partitions[partition].read(off, max_n)
-        self.offsets[key] = off + len(recs)
+        off = self.offsets.get(key, p.base) if offset is None else offset
+        recs = p.read(off, max_n)
+        if commit:
+            # never move a commit backwards: peeking at history with an
+            # explicit offset must not re-open acknowledged records
+            self.offsets[key] = max(off + len(recs),
+                                    self.offsets.get(key, p.base))
         return recs
 
+    def commit(self, topic: str, group: str, partition: int,
+               offset: int) -> None:
+        """Mark everything below ``offset`` consumed by ``group`` — the
+        commit-after-apply half of at-least-once delivery. Rejects
+        offsets outside [base, end] and never moves a commit backwards
+        (a late duplicate commit after redelivery must not re-open
+        already-acknowledged records)."""
+        p = self._partition(topic, partition)
+        if not p.base <= offset <= p.end:
+            raise ValueError(
+                f"commit offset {offset} outside [{p.base}, {p.end}] "
+                f"for {topic!r}[{partition}]")
+        key = (topic, group, partition)
+        self.offsets[key] = max(offset, self.offsets.get(key, p.base))
+
     def lag(self, topic: str, group: str) -> int:
-        t = self.topics[topic]
-        return sum(len(p) - self.offsets.get((topic, group, i), 0)
+        """Records produced but not committed by ``group`` — the
+        freshness marks' ``log_lag`` (uncommitted = not yet durably
+        applied downstream)."""
+        t = self._topic(topic)
+        return sum(p.end - self.offsets.get((topic, group, i), p.base)
                    for i, p in enumerate(t.partitions))
+
+    # -- retention ------------------------------------------------------------
+
+    def set_hold(self, topic: str, holder: str,
+                 offsets: Dict[int, int]) -> None:
+        """Pin a retention floor: ``truncate`` will never retire records
+        at or above ``offsets`` (partition -> absolute offset) until the
+        holder moves them. A commit-after-apply consumer holds its
+        CHECKPOINT barrier here — its committed offsets acknowledge
+        applies that are durable only at the next checkpoint, so the
+        barrier, not the commits, is what recovery still has to read."""
+        self._topic(topic)
+        self.holds[(topic, holder)] = dict(offsets)
+
+    def truncate(self, topic: str,
+                 barrier: Optional[Dict[int, int]] = None) -> int:
+        """Retire records behind ``barrier`` (partition -> absolute
+        offset; default: each partition's minimum committed offset over
+        all groups). The barrier is clamped to that minimum AND to every
+        registered retention hold regardless — truncation must never
+        steal records a group still has to read, nor records a
+        checkpointed consumer would need to replay after a crash.
+        Returns total records dropped."""
+        t = self._topic(topic)
+        dropped = 0
+        for i, p in enumerate(t.partitions):
+            floors = [off for (tp, _, pi), off in self.offsets.items()
+                      if tp == topic and pi == i]
+            floors += [h[i] for (tp, _), h in self.holds.items()
+                       if tp == topic and i in h]
+            floor = min(floors) if floors else p.base
+            want = floor if barrier is None else min(barrier.get(i, 0), floor)
+            dropped += p.truncate(want)
+        return dropped
 
     # -- persistence (crash recovery) ----------------------------------------
 
     def save(self, path: str) -> None:
+        # atomic publish (tmp + os.replace via index.atomic_write_blob):
+        # the log IS the durable surface recovery replays from, so a
+        # crash mid-save must leave the previous segment file intact
+        from repro.core.index import atomic_write_blob
         data = {
-            name: [p.records for p in t.partitions]
+            name: {"parts": [p.records for p in t.partitions],
+                   "base": [p.base for p in t.partitions],
+                   "rr": t._rr}
             for name, t in self.topics.items()
         }
-        blob = msgpack.packb({
+        atomic_write_blob(path, {
             "topics": data,
             "offsets": {"|".join(map(str, k)): v
                         for k, v in self.offsets.items()},
-        }, use_bin_type=True)
-        with open(path, "wb") as f:
-            f.write(zstd.ZstdCompressor(level=3).compress(blob))
+            "holds": {"|".join(k): {str(p): o for p, o in h.items()}
+                      for k, h in self.holds.items()},
+        })
 
     @classmethod
     def load(cls, path: str) -> "EventLog":
-        with open(path, "rb") as f:
-            blob = zstd.ZstdDecompressor().decompress(f.read())
-        raw = msgpack.unpackb(blob, raw=False)
+        from repro.core.index import read_blob
+        raw = read_blob(path)
         log = cls()
-        for name, parts in raw["topics"].items():
-            t = log.topic(name, len(parts))
-            for p, recs in zip(t.partitions, parts):
+        for name, entry in raw["topics"].items():
+            if isinstance(entry, list):          # pre-truncation format
+                entry = {"parts": entry, "base": [0] * len(entry), "rr": 0}
+            t = log.topic(name, len(entry["parts"]))
+            t._rr = entry.get("rr", 0)
+            for p, recs, base in zip(t.partitions, entry["parts"],
+                                     entry["base"]):
                 p.records = list(recs)
+                p.base = base
         for k, v in raw["offsets"].items():
             topic, group, part = k.split("|")
             log.offsets[(topic, group, int(part))] = v
+        for k, h in raw.get("holds", {}).items():
+            topic, holder = k.split("|")
+            log.holds[(topic, holder)] = {int(p): o for p, o in h.items()}
         return log

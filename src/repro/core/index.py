@@ -21,16 +21,79 @@ event_ingest.EventIngestor.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+import os
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import msgpack
 import numpy as np
 
+from repro.compat import zstd
 from repro.core import metadata as md
 from repro.core.sketches import ddsketch as dds
+
+
+def atomic_write_blob(path: str, obj, pre_replace: Optional[Callable] = None
+                      ) -> None:
+    """msgpack+zstd ``obj`` to ``path`` atomically: the bytes land in a
+    sibling tmp file first and ``os.replace`` publishes them in one
+    step, so a crash mid-write leaves the previous checkpoint intact —
+    readers see the old file or the new one, never a torn hybrid.
+    ``pre_replace`` is a fault-injection hook (tests/test_crash_recovery)
+    called between the tmp write and the publish."""
+    blob = zstd.ZstdCompressor(level=3).compress(
+        msgpack.packb(obj, use_bin_type=True))
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        if pre_replace is not None:
+            pre_replace()
+        os.replace(tmp, path)
+    except BaseException:
+        with contextlib.suppress(OSError):
+            os.unlink(tmp)
+        raise
+    # a REAL crash mid-write runs no handler: sweep tmp strays from
+    # DEAD writers now that a good checkpoint exists (a live pid's tmp
+    # may be a concurrent writer mid-publish — leave it alone)
+    base = os.path.basename(path) + ".tmp."
+    d = os.path.dirname(path) or "."
+    for stray in os.listdir(d):
+        if not stray.startswith(base):
+            continue
+        try:
+            pid = int(stray[len(base):])
+            os.kill(pid, 0)              # raises if the pid is gone
+        except (ValueError, ProcessLookupError):
+            with contextlib.suppress(OSError):
+                os.unlink(os.path.join(d, stray))
+        except OSError:
+            pass                         # alive but not ours (EPERM)
+
+
+def read_blob(path: str):
+    with open(path, "rb") as f:
+        blob = zstd.ZstdDecompressor().decompress(f.read())
+    # int map keys (the ingestor's fid-keyed state tables) are legal
+    return msgpack.unpackb(blob, raw=False, strict_map_key=False)
+
+
+def pack_array(a: np.ndarray) -> List:
+    """One checkpoint wire format for every ndarray: [dtype, shape,
+    raw bytes] — shared by the index arenas and the ingestor's sketch /
+    counts state (event_ingest.py), so serialization fixes land once."""
+    a = np.asarray(a)
+    return [str(a.dtype), list(a.shape), a.tobytes()]
+
+
+def unpack_array(packed: List) -> np.ndarray:
+    dtype, shape, data = packed
+    return np.frombuffer(data, np.dtype(dtype)).reshape(shape).copy()
 
 
 def bucket_pow2(n: int, floor: int = 1) -> int:
@@ -434,6 +497,67 @@ class PrimaryIndex:
         assert new_mask.all() and len(new_map) == len(self.paths)
         self.slot_map = new_map
         return dead
+
+    # -- checkpoint / restore (DESIGN.md §10.3) -------------------------------
+
+    def state_dict(self) -> Dict:
+        """Serializable arena snapshot: paths, columns, versions,
+        liveness, and the tombstone floor — everything a restore needs
+        to be byte-identical to this index. Slots are NOT serialized:
+        the slot map numbers subjects in first-occurrence order, so
+        ``paths`` (which is arena order) rebuilds it exactly."""
+        n = len(self.slot_map)
+        return {
+            "kind": "primary",
+            "paths": [str(p) for p in self.paths[:n]],
+            "version": pack_array(self.version[:n]),
+            "alive": pack_array(self.alive[:n]),
+            "columns": {k: pack_array(v[:n])
+                        for k, v in self.columns.items()},
+            "tombstone_floor": int(self.tombstone_floor),
+        }
+
+    def load_state(self, state: Dict, slot_map_factory=None) -> None:
+        """Rebuild this index in place from ``state_dict`` output. The
+        slot map is reassigned from the stored path order (identity
+        alignment with the arenas, like ``compact``)."""
+        assert state["kind"] == "primary", state.get("kind")
+        paths = np.asarray(state["paths"], object)
+        if slot_map_factory is None:
+            slot_map_factory = type(self.slot_map)
+        new_map = slot_map_factory()
+        self.columns = {k: unpack_array(v)
+                        for k, v in state["columns"].items()}
+        if len(paths):
+            slots, new_mask = new_map.assign(
+                paths, self.columns.get("path_hash"))
+            assert new_mask.all() and np.array_equal(
+                slots, np.arange(len(paths))), "corrupt checkpoint paths"
+        self.slot_map = new_map
+        self.paths = paths
+        self.version = unpack_array(state["version"])
+        self.alive = unpack_array(state["alive"])
+        self.tombstone_floor = int(state["tombstone_floor"])
+
+    @classmethod
+    def from_state(cls, state: Dict, slot_map_factory=None) -> "PrimaryIndex":
+        idx = cls() if slot_map_factory is None else \
+            cls(slot_map=slot_map_factory())
+        idx.load_state(state, slot_map_factory)
+        return idx
+
+    def checkpoint(self, path: str, meta: Optional[Dict] = None) -> None:
+        """Persist the index (msgpack+zstd, atomic tmp+rename — a crash
+        mid-checkpoint leaves the previous file intact). ``meta`` rides
+        along uninterpreted: the durable pipeline stores its consumed-
+        offset barrier here (core/stream_pipeline.py)."""
+        atomic_write_blob(path, {"state": self.state_dict(), "meta": meta})
+
+    @classmethod
+    def restore(cls, path: str, slot_map_factory=None) -> "PrimaryIndex":
+        """Load a ``checkpoint`` file into a fresh index, byte-identical
+        to the one that wrote it (live view, versions, floor)."""
+        return cls.from_state(read_blob(path)["state"], slot_map_factory)
 
     # -- views ----------------------------------------------------------------
 

@@ -158,6 +158,9 @@ class Monitor:
             # 0.0 until an anti-entropy pass runs (core/reconcile.py) —
             # or on duck-typed ingestors predating the mark
             out["reconciled_at"] = fr.get("reconciled_at", 0.0)
+            # uncommitted events behind a durable-pipeline ingestor
+            # (core/stream_pipeline.py); 0 when direct-fed
+            out["log_lag"] = fr.get("log_lag", 0)
         return out
 
 
@@ -201,4 +204,5 @@ class MonitorPool:
             out["watermark_seq"] = fr["applied_seq"]
             out["pending_events"] = fr["pending_events"]
             out["reconciled_at"] = fr.get("reconciled_at", 0.0)
+            out["log_lag"] = fr.get("log_lag", 0)
         return out

@@ -49,6 +49,10 @@ def merge_freshness(marks: Sequence[Dict[str, float]]
         # a deployment is only as reconciled as its LEAST-recently
         # reconciled partition (0.0 = some partition never was)
         "reconciled_at": min(m.get("reconciled_at", 0.0) for m in marks),
+        # uncommitted events still sitting in the durable log sum across
+        # partitions, like pending_events (DESIGN.md §10.4; 0 on
+        # direct-fed ingestors or marks predating the pipeline)
+        "log_lag": sum(m.get("log_lag", 0) for m in marks),
         "sources": len(marks),
     }
 

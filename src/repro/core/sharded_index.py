@@ -441,6 +441,56 @@ class ShardedPrimaryIndex:
             for sh in self.shards
             if sh.slot_stats()["dead_fraction"] > threshold)
 
+    # -- checkpoint / restore (DESIGN.md §10.3) -------------------------------
+
+    def state_dict(self) -> Dict:
+        """Per-shard arena snapshots plus the routing parameters — the
+        shard count MUST ride along: restoring into a different shard
+        count would silently re-route every subject."""
+        return {
+            "kind": "sharded",
+            "n_shards": self.n_shards,
+            "kernel_route_min": self.kernel_route_min,
+            "route_width": self.route_width,
+            "shards": [sh.state_dict() for sh in self.shards],
+        }
+
+    def load_state(self, state: Dict, slot_map_factory=None) -> None:
+        assert state["kind"] == "sharded", state.get("kind")
+        if state["n_shards"] != self.n_shards:
+            raise ValueError(
+                f"checkpoint has {state['n_shards']} shards, this index "
+                f"has {self.n_shards}: restore into a matching layout "
+                "(resharding goes through snapshot re-ingest)")
+        if slot_map_factory is None:
+            slot_map_factory = self.slot_map_factory
+        self.kernel_route_min = state["kernel_route_min"]
+        self.route_width = state["route_width"]
+        for sh, sub in zip(self.shards, state["shards"]):
+            sh.load_state(sub, slot_map_factory)
+
+    @classmethod
+    def from_state(cls, state: Dict,
+                   slot_map_factory=None) -> "ShardedPrimaryIndex":
+        idx = cls(n_shards=state["n_shards"],
+                  kernel_route_min=state["kernel_route_min"],
+                  route_width=state["route_width"],
+                  slot_map_factory=slot_map_factory)
+        idx.load_state(state, slot_map_factory)
+        return idx
+
+    def checkpoint(self, path: str, meta: Optional[Dict] = None) -> None:
+        """One atomic msgpack+zstd file for the whole deployment (see
+        PrimaryIndex.checkpoint)."""
+        from repro.core.index import atomic_write_blob
+        atomic_write_blob(path, {"state": self.state_dict(), "meta": meta})
+
+    @classmethod
+    def restore(cls, path: str,
+                slot_map_factory=None) -> "ShardedPrimaryIndex":
+        from repro.core.index import read_blob
+        return cls.from_state(read_blob(path)["state"], slot_map_factory)
+
     # -- reads (scatter-gather) -----------------------------------------------
 
     def live(self) -> Dict[str, np.ndarray]:
@@ -482,3 +532,12 @@ class ShardedPrimaryIndex:
 
     def __len__(self) -> int:
         return sum(len(sh) for sh in self.shards)
+
+
+def index_from_state(state: Dict, slot_map_factory=None):
+    """Rebuild whichever index shape a ``state_dict`` came from — the
+    durable pipeline's restore path doesn't care which layout it
+    checkpointed (DESIGN.md §10.3)."""
+    if state["kind"] == "sharded":
+        return ShardedPrimaryIndex.from_state(state, slot_map_factory)
+    return PrimaryIndex.from_state(state, slot_map_factory)

@@ -1,0 +1,393 @@
+"""Durable streaming pipeline: EventLog -> PipelineConsumer ->
+EventIngestor, with commit-after-apply offsets and checkpoint/restore
+(DESIGN.md §10).
+
+This wires the repo's three previously-disconnected pieces — the
+partitioned log (core/eventlog.py, the Kafka analogue), the event
+ingestor (core/event_ingest.py, the Flink ingest job analogue), and the
+dual index — into the paper's actual fault-tolerant architecture:
+
+- **produce**: metadata event batches are published into topic
+  partitions keyed by the repo's one FNV-1a hash family
+  (``metadata.path_hash`` over the event subject's name component), so
+  a subject's events always land in one partition in seq order, and
+  with ``n_partitions == n_shards`` partition p carries the traffic
+  that predominantly lands in shard p (partition <-> shard affinity;
+  exact for flat namespaces, approximate under deep trees — DESIGN.md
+  §10.1). The fid -> name side table rides the payloads, so the log
+  alone can rebuild consumer state after a crash.
+- **consume**: one ``PipelineConsumer`` per partition reads with
+  ``commit=False``; the group merges partitions by changelog seq (the
+  state manager folds a single global tree, so applies must respect
+  global event order) and drives ``EventIngestor.ingest`` in
+  ``batch_size`` chunks. Offsets are committed ONLY after the index
+  apply succeeds — at-least-once delivery; the index's version-gated
+  idempotent replay upgrades that to an exactly-once *effect*.
+- **checkpoint**: flush + commit, then persist index arenas + ingestor
+  state + the consumed offsets as one atomic msgpack+zstd file (the
+  Flink checkpoint barrier). The log then truncates segments behind
+  the barrier (retention). **restore** loads the checkpoint and seeks
+  consumers to the barrier; replaying the post-barrier suffix
+  reproduces the uninterrupted run byte-for-byte (live view, versions,
+  watermark, counts) — the contract tests/test_crash_recovery.py
+  enforces under randomized kill points.
+
+``hook`` is the fault-injection surface: a callable invoked at labeled
+points (``after_read``, ``mid_apply``, ``after_apply``,
+``after_commit``, ``mid_checkpoint``); a raise there models a crash at
+that point.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import events as ev
+from repro.core.eventlog import EventLog
+from repro.core.index import atomic_write_blob, read_blob
+from repro.core.sharded_index import path_hashes
+
+#: canonical event-batch column dtypes (events.empty_batch layout) —
+#: payloads serialize columns as raw bytes against this schema
+_DTYPES = {k: v.dtype for k, v in ev.empty_batch(0).items()}
+
+#: consumer poll page size: pump's pagination-termination check and
+#: PipelineConsumer.poll must agree on one number
+PAGE = 1024
+
+
+class PipelineConsumer:
+    """One consumer-group member pinned to one partition, with the
+    read/commit split the durable pipeline needs: ``poll`` advances an
+    in-memory position WITHOUT committing; ``commit`` publishes the
+    position to the broker only after the caller's apply succeeded. A
+    crash loses the position, not the records — a restarted consumer
+    resumes from the last checkpoint barrier (``seek``) or the
+    partition's retention base."""
+
+    def __init__(self, log: EventLog, topic: str, group: str,
+                 partition: int):
+        self.log = log
+        self.topic = topic
+        self.group = group
+        self.partition = partition
+        self.position = log._partition(topic, partition).base
+
+    def poll(self, max_n: int = PAGE) -> List:
+        recs = self.log.consume(self.topic, self.group, self.partition,
+                                max_n=max_n, commit=False,
+                                offset=self.position)
+        self.position += len(recs)
+        return recs
+
+    def commit(self, offset: Optional[int] = None) -> None:
+        self.log.commit(self.topic, self.group, self.partition,
+                        self.position if offset is None else offset)
+
+    def seek(self, offset: int) -> None:
+        self.position = int(offset)
+
+
+class DurablePipeline:
+    """Producer + consumer group + checkpoint coupling one EventLog
+    topic to one EventIngestor (and whichever primary-index layout it
+    mutates). See module docstring for the delivery semantics."""
+
+    def __init__(self, log: EventLog, ingestor, topic: str = "metadata-events",
+                 group: str = "index-pipeline", n_partitions: int = 1,
+                 batch_size: int = 1024,
+                 hook: Optional[Callable[[str], None]] = None):
+        self.log = log
+        self.ingestor = ingestor
+        self.topic_name = topic
+        self.group = group
+        self.topic = log.topic(topic, n_partitions)
+        self.n_partitions = len(self.topic.partitions)
+        self.batch_size = batch_size
+        self.hook = hook or (lambda point: None)
+        self.consumers = [PipelineConsumer(log, topic, group, p)
+                          for p in range(self.n_partitions)]
+        self.metrics = {"produced": 0, "read": 0, "applied_chunks": 0,
+                        "commits": 0, "checkpoints": 0, "truncated": 0}
+        # producer-side name table (for routing only; the authoritative
+        # consumer-side table rides the payloads into the ingestor)
+        self._prod_names: Dict[int, str] = {}
+        self._pending_names: Dict[int, str] = {}
+        # consume-side volatile state: the held-back incomplete bucket
+        # and, per partition, (end_offset, max_seq) of polled payloads
+        # awaiting commit eligibility — all rebuilt from the log after a
+        # crash, never durable
+        self._held: Optional[Dict[str, np.ndarray]] = None
+        self._polled: Dict[int, deque] = {p: deque() for p
+                                          in range(self.n_partitions)}
+        # freshness: log_lag = produced - committed for this group
+        ingestor.lag_source = lambda: log.lag(topic, group)
+        # retention hold at the replay floor (consumer start positions,
+        # moved forward by each checkpoint): a broker-level truncate must
+        # not retire records this pipeline would need to replay after a
+        # crash — its COMMITTED offsets acknowledge applies that are
+        # durable only at the next checkpoint
+        log.set_hold(topic, group,
+                     {c.partition: c.position for c in self.consumers})
+
+    # -- produce side ---------------------------------------------------------
+
+    def produce(self, batch: Dict[str, np.ndarray],
+                names: Optional[Dict[int, str]] = None) -> int:
+        """Publish one changelog micro-batch into the topic, split per
+        partition by the FNV route of each event's subject name. Name
+        bindings ride the first payload of the call (every partition's
+        payloads funnel into the one shared ingestor, so bindings reach
+        the resolver before any of this call's events apply).
+
+        Bindings are treated as WRITE-ONCE per fid — the repo's
+        EventStream convention (a fid keeps its name component for
+        life). Replay delivers all of a suffix's bindings before its
+        first chunk applies, so rebinding a fid's name mid-stream could
+        resolve pre-rebind events through the newer name and break the
+        byte-identical-recovery contract (DESIGN.md §10.2)."""
+        if names:
+            self._prod_names.update(names)
+            self._pending_names.update(names)
+        n = len(batch["fid"])
+        if n == 0:
+            if self._pending_names:
+                # names-only payload: bindings are durable once appended,
+                # even when no events ride along (keyless -> round-robin)
+                self.topic.produce({
+                    "n": 0,
+                    "cols": {k: b"" for k in _DTYPES},
+                    "names": {int(k): v
+                              for k, v in self._pending_names.items()},
+                })
+                self._pending_names = {}
+            return 0
+        fids = np.asarray(batch["fid"])
+        # the repo's one FNV family, vectorized (sharded_index routing)
+        keys = path_hashes([self._prod_names.get(int(f), f"#{int(f)}")
+                            for f in fids])
+        parts = keys % np.uint32(self.n_partitions)
+        first = True
+        for p in range(self.n_partitions):
+            sel = parts == p
+            if not sel.any():
+                continue
+            payload = {
+                "n": int(sel.sum()),
+                "cols": {k: np.ascontiguousarray(
+                    np.asarray(batch[k])[sel].astype(_DTYPES[k])).tobytes()
+                    for k in _DTYPES},
+            }
+            if first and self._pending_names:
+                payload["names"] = {int(k): v for k, v
+                                    in self._pending_names.items()}
+                self._pending_names = {}
+            first = False
+            self.topic.produce(payload, key=p)
+        self.metrics["produced"] += n
+        return n
+
+    # -- consume side ---------------------------------------------------------
+
+    def pump(self) -> Dict[str, int]:
+        """One consume cycle: drain every partition's pending records,
+        merge them (plus any held-back tail) by changelog seq into
+        global order, hand the ingestor one chunk per COMPLETE
+        seq-aligned bucket, then commit each partition's offsets up to
+        the applied watermark.
+
+        Two disciplines make recovery byte-identical to an
+        uninterrupted run (DESIGN.md §10.2):
+
+        - **aligned chunking**: chunk boundaries sit at absolute seq
+          multiples of ``batch_size`` (the incomplete top bucket is
+          held in memory until it fills, or until a flush/checkpoint
+          forces it). Chunk boundaries are then a pure function of the
+          event seqs plus the deterministic flush schedule — NOT of
+          produce/pump/crash timing — so a post-crash replay coalesces
+          the suffix exactly as the original run did.
+        - **commit-after-apply**: a partition's offset commits only
+          through payloads whose every event seq is at or below the
+          ingestor's applied watermark. Held or buffered events keep
+          their payloads uncommitted; a crash replays them
+          (at-least-once), and the version gate makes the overlap an
+          exactly-once effect.
+        """
+        names: Dict[int, str] = {}
+        polled: List[Dict[str, np.ndarray]] = []
+        for c in self.consumers:
+            while True:
+                pos0 = c.position
+                got = c.poll(PAGE)
+                for j, r in enumerate(got):
+                    cols = {k: np.frombuffer(r["cols"][k], dt)
+                            for k, dt in _DTYPES.items()}
+                    names.update(r.get("names") or {})
+                    # names-only payloads carry no events: max_seq 0
+                    # makes them commit-eligible immediately
+                    smax = int(cols["seq"].max()) if len(cols["seq"]) else 0
+                    self._polled[c.partition].append((pos0 + j + 1, smax))
+                    polled.append(cols)
+                if len(got) < PAGE:
+                    break
+        self.hook("after_read")
+        n_new = sum(len(p["seq"]) for p in polled)
+        self.metrics["read"] += n_new
+        applied = self._apply_events(polled, names, force=False)
+        self.hook("after_apply")
+        self._commit_applied()
+        return {"read": n_new, "applied": applied}
+
+    def _apply_events(self, polled: List[Dict[str, np.ndarray]],
+                      names: Dict[int, str], force: bool) -> int:
+        """Merge new + held events into seq order and hand the ingestor
+        one chunk per aligned bucket; hold back the incomplete top
+        bucket unless ``force`` (flush/checkpoint/stream-end)."""
+        parts = ([self._held] if self._held is not None else []) + polled
+        self._held = None
+        if not parts:
+            if names:       # name bindings still have to reach the resolver
+                self.ingestor.ingest(ev.empty_batch(0), names=names)
+            return 0
+        merged = {k: np.concatenate([p[k] for p in parts]) for k in _DTYPES}
+        if len(merged["seq"]) == 0:      # names-only payloads
+            if names:
+                self.ingestor.ingest(ev.empty_batch(0), names=names)
+            return 0
+        order = np.argsort(merged["seq"], kind="stable")
+        merged = {k: v[order] for k, v in merged.items()}
+        seqs = merged["seq"]
+        bsz = self.batch_size
+        boundary = int(seqs[-1]) if force else (int(seqs[-1]) // bsz) * bsz
+        apply_sel = seqs <= boundary
+        if not apply_sel.all():
+            self._held = {k: v[~apply_sel] for k, v in merged.items()}
+            merged = {k: v[apply_sel] for k, v in merged.items()}
+        n = len(merged["seq"])
+        if n == 0:
+            if names:
+                self.ingestor.ingest(ev.empty_batch(0), names=names)
+            return 0
+        buckets = (merged["seq"] - 1) // bsz
+        edges = np.concatenate([[0], np.nonzero(np.diff(buckets))[0] + 1,
+                                [n]])
+        for ci, (lo, hi) in enumerate(zip(edges[:-1], edges[1:])):
+            chunk = {k: v[lo:hi] for k, v in merged.items()}
+            self.ingestor.ingest(chunk, names=names if ci == 0 else None)
+            self.metrics["applied_chunks"] += 1
+            if hi < n:
+                self.hook("mid_apply")
+        return n
+
+    def _commit_applied(self) -> None:
+        """Advance each partition's committed offset through the polled
+        payloads whose events are all applied (seq at or below the
+        ingestor watermark) — the commit-after-apply invariant."""
+        # buffered events sitting between flushes have seqs above the
+        # watermark by construction, so the scan below excludes them
+        applied_seq = self.ingestor.watermark.applied_seq
+        moved = False
+        for c in self.consumers:
+            q = self._polled[c.partition]
+            target = None
+            while q and q[0][1] <= applied_seq:
+                target = q.popleft()[0]
+            if target is not None:
+                c.commit(target)
+                moved = True
+        if moved:
+            self.metrics["commits"] += 1
+        self.hook("after_commit")
+
+    def flush(self) -> None:
+        """Force-apply the held tail and everything buffered, then
+        commit the offsets behind it. NOTE: a mid-stream flush places a
+        chunk boundary at the current stream position; recovery
+        byte-identity holds when flush points are deterministic stream
+        positions (checkpoint schedules are — ad-hoc mid-stream flushes
+        trade that determinism for immediate visibility)."""
+        self._apply_events([], {}, force=True)
+        self.ingestor.flush()
+        self._commit_applied()
+
+    def drain(self) -> int:
+        """Pump until the log has nothing new, then flush+commit; the
+        index is then exactly as fresh as the log. Returns events read."""
+        total = 0
+        while True:
+            r = self.pump()
+            if r["read"] == 0:
+                break
+            total += r["read"]
+        self.flush()
+        return total
+
+    def lag(self) -> int:
+        """Log records (payloads, Kafka-style — not single events)
+        produced but not committed by this group: the ``log_lag``
+        freshness mark (0 once drained + flushed)."""
+        return self.log.lag(self.topic_name, self.group)
+
+    # -- checkpoint / restore -------------------------------------------------
+
+    def checkpoint(self, path: str) -> Dict[int, int]:
+        """Flush, commit, persist (index + ingestor + consumed-offset
+        barrier) atomically, then truncate the log behind the barrier.
+        The barrier is an APPLIED-state barrier: everything below it is
+        in the checkpointed index, everything at or above it survives
+        in the log for replay — crash recovery = ``load_checkpoint`` +
+        ``drain`` (replay the suffix).
+
+        The barrier consumes to the CURRENT produced position first
+        (pump + flush): a checkpoint's stream position is then a pure
+        function of what has been produced, so a checkpoint retried
+        after a mid-checkpoint crash barriers at the same position the
+        original attempt did — which keeps the buffered-mode apply
+        windows, and therefore recovered record versions, identical to
+        an uninterrupted run's (DESIGN.md §10.2)."""
+        self.pump()
+        self.flush()
+        barrier = {c.partition: c.position for c in self.consumers}
+        obj = {
+            "index": self.ingestor.primary.state_dict(),
+            "ingestor": self.ingestor.state_dict(),
+            "barrier": {"topic": self.topic_name, "group": self.group,
+                        "offsets": barrier},
+        }
+        atomic_write_blob(path, obj,
+                          pre_replace=lambda: self.hook("mid_checkpoint"))
+        self.metrics["checkpoints"] += 1
+        # the barrier is durable: move the retention hold up to it, then
+        # retire the segments behind it
+        self.log.set_hold(self.topic_name, self.group, barrier)
+        self.metrics["truncated"] += self.log.truncate(self.topic_name,
+                                                       barrier)
+        return barrier
+
+    def load_checkpoint(self, path: str) -> Dict[int, int]:
+        """Restore index + ingestor state in place and seek every
+        consumer to the checkpoint's offset barrier. The barrier — not
+        the broker's committed offsets — is the resume point: commits
+        past the last checkpoint acknowledge applies whose effects died
+        with the crashed process, so those records must re-apply (the
+        version gate makes the overlap idempotent)."""
+        obj = read_blob(path)
+        bar = obj["barrier"]
+        if bar["topic"] != self.topic_name:
+            raise ValueError(f"checkpoint is for topic {bar['topic']!r}, "
+                             f"this pipeline consumes {self.topic_name!r}")
+        self.ingestor.primary.load_state(obj["index"])
+        self.ingestor.load_state(obj["ingestor"])
+        # producer-side routing table: rebound from the restored name
+        # bindings so post-recovery produces keep per-subject partition
+        # affinity instead of falling back to '#fid' keys
+        self._prod_names.update(self.ingestor._name)
+        offsets = {int(k): int(v) for k, v in bar["offsets"].items()}
+        self._held = None
+        for c in self.consumers:
+            c.seek(offsets[c.partition])
+            self._polled[c.partition].clear()
+        self.log.set_hold(self.topic_name, self.group, offsets)
+        return offsets

@@ -1,0 +1,246 @@
+"""Crash-recovery fault-injection harness (ISSUE 4 flagship).
+
+Drives the durable pipeline (core/stream_pipeline.py) over a randomized
+churn workload — creates, stat updates, deletes, dir renames — while
+killing the consumer/index process at randomized points in every
+kill-point class:
+
+- ``after_produce``: events durable in the log, nothing consumed;
+- ``after_read``: records read (positions advanced), nothing applied;
+- ``mid_apply``: some chunks applied in memory, offsets uncommitted;
+- ``after_apply``: everything applied in memory, commit lost;
+- ``mid_checkpoint``: torn checkpoint write (tmp written, publish lost).
+
+A "crash" discards every volatile object (pipeline, ingestor, index —
+process memory); only the broker (EventLog) and the checkpoint file
+survive, exactly the durable surface a real deployment has. Recovery =
+restore the last checkpoint + replay the post-barrier suffix. The
+recovered index must be **byte-identical to the uninterrupted oracle**:
+the full live() view, per-record versions, the applied-seq watermark,
+and the exact aggregate counting matrix — across eager/buffered
+consistency modes x 1/4 shards (the acceptance matrix).
+"""
+import os
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import events as ev
+from repro.core import snapshot as snap
+from repro.core.event_ingest import EventIngestor, IngestConfig
+from repro.core.eventlog import EventLog
+from repro.core.index import AggregateIndex
+from repro.core.sharded_index import ShardedPrimaryIndex
+from repro.core.stream_pipeline import DurablePipeline
+from test_differential import assert_byte_identical, gen_workload
+
+PCFG = snap.PipelineConfig(n_users=8, n_groups=4, n_dirs=16)
+
+KILL_POINTS = ("after_produce", "after_read", "mid_apply", "after_apply",
+               "mid_checkpoint")
+PUMP_EVERY = 2            # pump every 2 produced batches (2 apply chunks)
+CKPT_EVERY = 4            # checkpoint every 4 produced batches
+
+
+class Crash(RuntimeError):
+    """Injected process death."""
+
+
+def _workload(seed, n_ops=350, take=48):
+    stream = ev.EventStream(start_fid=1)
+    gen_workload(stream, n_ops, seed)
+    names = {0: "fs", **stream.names}
+    batches = []
+    while len(stream):
+        batches.append(stream.take(take))
+    return batches, names
+
+
+def _build(mode, n_shards, log, hook=None):
+    primary = ShardedPrimaryIndex(n_shards)
+    ing = EventIngestor(
+        IngestConfig(mode=mode, pad_to=64, max_buffer_events=100,
+                     freshness_window=1e9, update_aggregates=True),
+        PCFG, primary, AggregateIndex())
+    pipe = DurablePipeline(log, ing, n_partitions=max(n_shards, 2),
+                           batch_size=48, hook=hook)
+    return primary, ing, pipe
+
+
+def _drive(ckpt, mode, n_shards, kills=(), seed=11):
+    """Run the produce/pump/checkpoint schedule, injecting ``kills`` —
+    a sequence of (kill_point, nth_occurrence) armed one at a time. On
+    each crash every volatile object is discarded and rebuilt from the
+    durable pair (log, checkpoint file); the supervisor then RESUMES
+    its schedule at the failed step (produced batches are durable and
+    never re-produced). Returns (primary, ingestor, n_crashes)."""
+    batches, names = _workload(seed)
+    log = EventLog()
+    kills = list(kills)
+    state = {"armed": kills.pop(0) if kills else None, "count": 0,
+             "crashes": 0}
+
+    def hook(point):
+        if state["armed"] and state["armed"][0] == point:
+            state["count"] += 1
+            if state["count"] == state["armed"][1]:
+                raise Crash(point)
+
+    def reboot():
+        state["crashes"] += 1
+        state["armed"] = kills.pop(0) if kills else None
+        state["count"] = 0
+        primary, ing, pipe = _build(mode, n_shards, log, hook)
+        if os.path.exists(ckpt):
+            pipe.load_checkpoint(ckpt)
+        return primary, ing, pipe
+
+    steps = []
+    for bi in range(len(batches)):
+        steps.append(("produce", bi))
+        if (bi + 1) % PUMP_EVERY == 0:
+            steps.append(("pump", None))
+        if (bi + 1) % CKPT_EVERY == 0:
+            steps.append(("ckpt", None))
+    steps += [("drain", None), ("ckpt", None)]     # shutdown barrier
+
+    primary, ing, pipe = _build(mode, n_shards, log, hook)
+    produced = set()
+    si = 0
+    while si < len(steps):
+        op, arg = steps[si]
+        try:
+            if op == "produce":
+                if arg not in produced:    # durable: never re-produce
+                    pipe.produce(batches[arg],
+                                 names=names if arg == 0 else None)
+                    produced.add(arg)
+                hook("after_produce")
+            elif op == "pump":
+                pipe.pump()
+            elif op == "ckpt":
+                pipe.checkpoint(ckpt)
+            else:
+                pipe.drain()
+            si += 1
+        except Crash:
+            primary, ing, pipe = reboot()
+    return primary, ing, state["crashes"]
+
+
+_ORACLES = {}
+
+
+def _oracle(ckpt_dir, mode, n_shards, seed=11):
+    key = (mode, n_shards, seed)
+    if key not in _ORACLES:
+        ckpt = os.path.join(str(ckpt_dir), f"oracle-{mode}-{n_shards}.ckpt")
+        primary, ing, crashes = _drive(ckpt, mode, n_shards, kills=(),
+                                       seed=seed)
+        assert crashes == 0
+        _ORACLES[key] = (primary, ing)
+    return _ORACLES[key]
+
+
+def _assert_recovered_equals_oracle(got, oracle, ctx):
+    primary, ing = got
+    o_primary, o_ing = oracle
+    # full live view, every column, byte-identical
+    assert_byte_identical(primary.live(), o_primary.live(), ctx)
+    # per-record versions (the idempotent-replay clock) identical
+    for path in o_primary.live()["path"]:
+        assert primary.lookup(str(path)) == o_primary.lookup(str(path)), \
+            (ctx, path)
+    # watermark converged to the same applied seq
+    assert ing.freshness()["applied_seq"] == \
+        o_ing.freshness()["applied_seq"], ctx
+    # exact aggregate counting matrix identical
+    np.testing.assert_array_equal(ing.counts, o_ing.counts, err_msg=ctx)
+    assert ing.counts_exact and o_ing.counts_exact, ctx
+    # nothing left unread or uncommitted behind the recovered index
+    fr = ing.freshness()
+    assert fr["pending_events"] == 0 and fr["log_lag"] == 0, ctx
+
+
+@pytest.fixture(scope="module")
+def oracle_dir(tmp_path_factory):
+    return tmp_path_factory.mktemp("oracles")
+
+
+@pytest.mark.parametrize("mode", ["eager", "buffered"])
+@pytest.mark.parametrize("n_shards", [1, 4])
+@pytest.mark.parametrize("point", KILL_POINTS)
+def test_kill_point_recovers_byte_identical(point, mode, n_shards,
+                                            oracle_dir, tmp_path):
+    """Two randomized kills of the given class; restore + replay must
+    reproduce the uninterrupted run byte-for-byte."""
+    rng = np.random.default_rng(
+        zlib.crc32(repr((point, mode, n_shards)).encode()))
+    kills = [(point, int(rng.integers(1, 3))), (point, 1)]
+    ckpt = str(tmp_path / "pipe.ckpt")
+    primary, ing, crashes = _drive(ckpt, mode, n_shards, kills=kills)
+    assert crashes == len(kills), (point, mode, n_shards)
+    _assert_recovered_equals_oracle(
+        (primary, ing), _oracle(oracle_dir, mode, n_shards),
+        f"point={point} mode={mode} shards={n_shards}")
+
+
+def test_mixed_kill_storm_recovers(oracle_dir, tmp_path):
+    """One run, one randomized kill from EVERY class in sequence — the
+    pipeline survives a storm of different failures."""
+    rng = np.random.default_rng(777)
+    points = list(KILL_POINTS)
+    rng.shuffle(points)
+    kills = [(p, 1) for p in points]
+    ckpt = str(tmp_path / "pipe.ckpt")
+    primary, ing, crashes = _drive(ckpt, "eager", 4, kills=kills)
+    assert crashes == len(kills)
+    _assert_recovered_equals_oracle(
+        (primary, ing), _oracle(oracle_dir, "eager", 4), "kill-storm")
+
+
+def test_checkpoint_truncates_log_and_recovery_survives(tmp_path):
+    """Retention really retires the prefix behind the barrier, and a
+    post-truncation crash still recovers (the checkpoint carries the
+    truncated history)."""
+    batches, names = _workload(seed=23)
+    log = EventLog()
+    ckpt = str(tmp_path / "pipe.ckpt")
+    primary, ing, pipe = _build("eager", 4, log)
+    first = True
+    for b in batches:
+        pipe.produce(b, names=names if first else None)
+        first = False
+    pipe.drain()
+    pipe.checkpoint(ckpt)
+    assert pipe.metrics["truncated"] > 0
+    assert sum(p.base for p in pipe.topic.partitions) > 0
+    # crash now; a fresh process restores and matches the pre-crash view
+    live_before = primary.live()
+    primary2, ing2, pipe2 = _build("eager", 4, log)
+    pipe2.load_checkpoint(ckpt)
+    pipe2.drain()
+    assert_byte_identical(primary2.live(), live_before, "post-truncation")
+    np.testing.assert_array_equal(ing2.counts, ing.counts)
+
+
+def test_restore_republishes_aggregate_records(tmp_path):
+    """After a restore, readers see aggregate summaries immediately —
+    the records are derived from the checkpointed sketch + counts."""
+    batches, names = _workload(seed=31)
+    log = EventLog()
+    ckpt = str(tmp_path / "pipe.ckpt")
+    primary, ing, pipe = _build("eager", 1, log)
+    first = True
+    for b in batches:
+        pipe.produce(b, names=names if first else None)
+        first = False
+    pipe.drain()
+    pipe.checkpoint(ckpt)
+    _, ing2, pipe2 = _build("eager", 1, log)
+    pipe2.load_checkpoint(ckpt)
+    assert set(ing2.aggregate.records) == set(ing.aggregate.records)
+    for k, rec in ing.aggregate.records.items():
+        assert ing2.aggregate.records[k]["file_count"] == \
+            rec["file_count"], k

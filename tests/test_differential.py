@@ -366,6 +366,54 @@ def test_compaction_preserves_state_and_watermark(n_shards):
     assert sorted(q.find_by_name(r"f\d+$")) == sorted(live_before["path"])
 
 
+@pytest.mark.parametrize("mode", ["eager", "buffered"])
+@pytest.mark.parametrize("n_shards", [None, 3])
+def test_through_log_pipeline_matches_direct_feed(mode, n_shards):
+    """ISSUE 4 satellite: the same random workload routed THROUGH the
+    durable pipeline (EventLog topic partitions -> PipelineConsumer
+    group -> ingestor, commit-after-apply) must leave the final index
+    byte-identical to the direct-feed path — the log is a transport,
+    not a semantic layer."""
+    from repro.core.eventlog import EventLog
+    from repro.core.stream_pipeline import DurablePipeline
+
+    stream = ev.EventStream(start_fid=1)
+    gen_workload(stream, 400, seed=17)
+    names = {0: "fs", **stream.names}
+    batches = []
+    while len(stream):
+        batches.append(stream.take(64))
+
+    results = {}
+    for leg in ("direct", "log"):
+        primary = make_primary(n_shards)
+        ing = EventIngestor(
+            IngestConfig(mode=mode, pad_to=64, max_buffer_events=150,
+                         freshness_window=1e9, update_aggregates=False),
+            PCFG, primary, AggregateIndex(),
+            names=names if leg == "direct" else None)
+        if leg == "direct":
+            for b in batches:
+                ing.ingest(b)
+            ing.flush()
+        else:
+            pipe = DurablePipeline(EventLog(), ing, n_partitions=3,
+                                   batch_size=64)
+            for k, b in enumerate(batches):
+                pipe.produce(b, names=names if k == 0 else None)
+                if k % 2 == 0:
+                    pipe.pump()
+            pipe.drain()
+            assert pipe.lag() == 0
+        results[leg] = (primary, ing)
+
+    ctx = f"log-vs-direct mode={mode} shards={n_shards}"
+    assert_byte_identical(results["log"][0].live(),
+                          results["direct"][0].live(), ctx)
+    assert results["log"][1].freshness()["applied_seq"] == \
+        results["direct"][1].freshness()["applied_seq"], ctx
+
+
 def test_sharded_equals_monolith_after_replay():
     """The same replay leaves the sharded and monolithic indexes in
     byte-identical live states (scatter-gather view vs flat view)."""
