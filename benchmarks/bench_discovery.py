@@ -1,0 +1,270 @@
+"""Discovery-index benchmark (ISSUE 5; DESIGN.md §11).
+
+Claim under test: at >= 1M records, the selective Table-I range/set
+queries and substring ``find_by_name`` run >= 2x faster through the
+discovery index (sorted runs + zone maps; trigram postings) than
+through the scan path — with the planner's output verified
+byte-identical to the scan on every measured query, and the
+fresh -> stale -> fallback -> rebuilt cycle demonstrated end to end.
+
+Both routes run on the SAME engine: the scan leg detaches the
+discovery index (planner falls back), the accelerated leg re-attaches
+it — so the comparison isolates the routing decision, not engine
+construction. Timings are medians over reps, both legs back-to-back
+per rep (bench_sharded methodology). Incremental-maintenance overhead
+(the delta-publication write amplification on ``upsert_batch``) is
+reported alongside, not gated — it is the price of the read speedups.
+
+Smoke mode shrinks the corpus for CI bitrot protection; the 2x gate
+applies at full size, a reduced floor in smoke (small corpora shrink
+the scan cost the index amortizes away).
+"""
+from __future__ import annotations
+
+import gc
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.discovery import DiscoveryConfig, index_lag
+from repro.core.index import AggregateIndex, PrimaryIndex
+from repro.core.metadata import files_only, synth_filesystem
+from repro.core.query import QueryEngine
+from repro.core.sharded_index import ShardedPrimaryIndex
+
+SMOKE = "--smoke" in sys.argv[1:]
+CORPUS = 60_000 if SMOKE else 1_000_000
+N_DIRS = max(200, CORPUS // 100)
+REPS = 3 if SMOKE else 5
+NOW = 1.7e9
+#: the >= 2x claim is stated at 1M records; smoke corpora gate at a
+#: reduced floor (the scan side is too cheap to amortize against)
+NEED = 1.3 if SMOKE else 2.0
+
+LAYOUTS = (("mono", lambda: PrimaryIndex()),
+           ("sharded4", lambda: ShardedPrimaryIndex(4)))
+
+#: the selective Table-I suite: (name, engine -> result). Patterns are
+#: chosen selective — the regime the paper's discovery index serves
+#: (interactive "find my files" / policy candidate lists)
+QUERIES = [
+    ("name_substring", lambda q: q.find_by_name(r"/f1234\d$")),
+    ("name_glob", lambda q: q.find_by_glob("*/f999??")),
+    ("not_accessed_12m", lambda q: q.not_accessed_since(365 * 86400)),
+    ("large_low_access", lambda q: q.large_cold_files(100e9, 180 * 86400)),
+    ("past_retention_2y", lambda q: q.past_retention(2 * 365 * 86400)),
+    ("world_writable", lambda q: q.world_writable()),
+    # orphan sweep: all but the 4 rarest owners are active (~1.7% of
+    # files orphaned — a realistic selectivity for deleted-user cleanup)
+    ("deleted_users", lambda q: q.owned_by_deleted_users(list(range(28)))),
+]
+
+
+def timed(fn):
+    """Time one call with the cyclic GC quiesced: the scan leg's
+    live() materializations (12 columns + a 1M-object path array per
+    call) otherwise land collector pauses inside whichever leg runs
+    next — both legs get the same treatment."""
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        out = fn()
+        dt = time.perf_counter() - t0
+    finally:
+        gc.enable()
+    return dt, out
+
+
+def bench_layout(files, layout_name, layout) -> List[Dict]:
+    idx = layout()
+    t0 = time.perf_counter()
+    idx.ingest_table(files, 1)
+    ingest_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    idx.attach_discovery()
+    build_s = time.perf_counter() - t0
+    q = QueryEngine(idx, AggregateIndex(), now=NOW)
+    print(f"# {layout_name}: ingest {ingest_s:.1f}s, discovery build "
+          f"{build_s:.1f}s over {len(idx)} records")
+
+    shards = getattr(idx, "shards", None) or [idx]
+
+    def detach():
+        saved = [sh.discovery for sh in shards]
+        for sh in shards:
+            sh.discovery = None
+        return saved
+
+    def reattach(saved):
+        for sh, d in zip(shards, saved):
+            sh.discovery = d
+
+    rows = []
+    for name, fn in QUERIES:
+        fn(q)                                     # warm both code paths
+        accel_t, scan_t = [], []
+        equal = True
+        for _ in range(REPS):
+            ta, ra = timed(lambda: fn(q))
+            assert q.last_plan["route"] == "discovery", (name, q.last_plan)
+            cand = q.last_plan["candidates"]
+            saved = detach()
+            ts, rs = timed(lambda: fn(q))
+            assert q.last_plan["route"] == "scan", (name, q.last_plan)
+            reattach(saved)
+            accel_t.append(ta)
+            scan_t.append(ts)
+            equal &= (ra.dtype == rs.dtype and np.array_equal(ra, rs))
+        rows.append({
+            "layout": layout_name, "query": name,
+            "matches": len(ra), "candidates": cand,
+            "scan_ms": round(float(np.median(scan_t)) * 1e3, 2),
+            "discovery_ms": round(float(np.median(accel_t)) * 1e3, 2),
+            "speedup_x": round(float(np.median(scan_t))
+                               / float(np.median(accel_t)), 2),
+            "identical": equal,
+        })
+    return rows
+
+
+def bench_cycle(files, layout_name, layout) -> Dict:
+    """fresh -> stale -> fallback -> rebuilt, with equality at every
+    stage (the planner's transparency contract)."""
+    idx = layout()
+    idx.ingest_table(files, 1)
+    idx.attach_discovery(DiscoveryConfig(merge_threshold=4096))
+    q = QueryEngine(idx, AggregateIndex(), now=NOW)
+    probe = QUERIES[2][1]                         # not_accessed_12m
+    fresh = probe(q)
+    stages = {"fresh": q.last_plan["route"]}
+    # incremental churn keeps it fresh (delta publication)
+    rng = np.random.default_rng(0)
+    pick = rng.choice(len(files.paths), size=20_000, replace=False)
+    if hasattr(idx, "route"):
+        # warm the hashshard routing jit outside the timed region
+        idx.route(list(files.paths[pick]))
+    t0 = time.perf_counter()
+    idx.delete_batch(list(files.paths[pick]),
+                     np.full(len(pick), 2, np.int64))
+    churn_s = time.perf_counter() - t0
+    after_churn = probe(q)
+    stages["after_churn"] = q.last_plan["route"]
+    lag_churn = index_lag(idx)
+    # bulk snapshot re-ingest: not describable slot-by-slot -> stale
+    idx.ingest_table(files, 3)
+    stale = probe(q)
+    stages["stale"] = q.last_plan["route"]
+    lag_stale = index_lag(idx)
+    t0 = time.perf_counter()
+    idx.rebuild_discovery()
+    rebuild_s = time.perf_counter() - t0
+    rebuilt = probe(q)
+    stages["rebuilt"] = q.last_plan["route"]
+    ok = (np.array_equal(stale, rebuilt)
+          and len(fresh) == len(rebuilt)
+          and len(after_churn) < len(fresh))      # churn really deleted
+    return {"layout": layout_name, **stages,
+            "lag_churn": lag_churn, "lag_stale": lag_stale,
+            "lag_rebuilt": index_lag(idx),
+            "churn_ms": round(churn_s * 1e3, 1),
+            "rebuild_s": round(rebuild_s, 2), "equal": ok}
+
+
+def bench_maintenance(files) -> Dict:
+    """Write amplification of delta publication: upsert_batch churn
+    with and without a discovery index attached (reported, not gated)."""
+    rng = np.random.default_rng(1)
+    out = {}
+    for tag in ("bare", "discovery"):
+        idx = PrimaryIndex()
+        idx.ingest_table(files, 1)
+        if tag == "discovery":
+            idx.attach_discovery()
+        pick = rng.choice(len(files.paths), size=8192, replace=False)
+        paths = list(files.paths[pick])
+        fields = {"path_hash": files.path_hash[pick],
+                  "size": files.size[pick].astype(np.float32),
+                  "atime": files.atime[pick].astype(np.float32)}
+        reps = []
+        for rep in range(REPS):
+            t0 = time.perf_counter()
+            idx.upsert_batch(paths, fields,
+                             np.full(len(pick), 2 + rep, np.int64))
+            reps.append(time.perf_counter() - t0)
+        out[tag] = float(np.median(reps))
+    return {"batch": 8192,
+            "bare_ms": round(out["bare"] * 1e3, 2),
+            "discovery_ms": round(out["discovery"] * 1e3, 2),
+            "overhead_x": round(out["discovery"] / out["bare"], 2)}
+
+
+def run():
+    t0 = time.perf_counter()
+    table = synth_filesystem(CORPUS, n_dirs=N_DIRS, seed=0)
+    files = files_only(table)
+    print(f"# corpus: {len(files)} files ({time.perf_counter() - t0:.1f}s)")
+    query_rows = []
+    cycle_rows = []
+    for nm, fn in LAYOUTS:
+        query_rows += bench_layout(files, nm, fn)
+        cycle_rows.append(bench_cycle(files, nm, fn))
+    maint = bench_maintenance(files)
+    return query_rows, cycle_rows, maint
+
+
+def validate(query_rows: List[Dict], cycle_rows: List[Dict]) -> List[str]:
+    fails = []
+    for r in query_rows:
+        if not r["identical"]:
+            fails.append(f"[{r['layout']}/{r['query']}] discovery output "
+                         "differs from the scan path")
+        if r["speedup_x"] < NEED:
+            fails.append(
+                f"[{r['layout']}/{r['query']}] discovery speedup should "
+                f"be >= {NEED}x (got {r['speedup_x']}x)")
+    for c in cycle_rows:
+        want = {"fresh": "discovery", "after_churn": "discovery",
+                "stale": "scan", "rebuilt": "discovery"}
+        for stage, route in want.items():
+            if c[stage] != route:
+                fails.append(f"[{c['layout']}] cycle stage {stage} routed "
+                             f"{c[stage]}, expected {route}")
+        if not c["equal"]:
+            fails.append(f"[{c['layout']}] cycle stage results diverged")
+        if c["lag_stale"] <= 0 or c["lag_rebuilt"] != 0 \
+                or c["lag_churn"] != 0:
+            fails.append(f"[{c['layout']}] index_lag marks wrong: {c}")
+    return fails
+
+
+def main() -> List[str]:
+    query_rows, cycle_rows, maint = run()
+    cols = ["layout", "query", "matches", "candidates", "scan_ms",
+            "discovery_ms", "speedup_x", "identical"]
+    print(",".join(cols))
+    for r in query_rows:
+        print(",".join(str(r[c]) for c in cols))
+    cols2 = ["layout", "fresh", "after_churn", "stale", "rebuilt",
+             "lag_churn", "lag_stale", "lag_rebuilt", "churn_ms",
+             "rebuild_s", "equal"]
+    print(",".join(cols2))
+    for c in cycle_rows:
+        print(",".join(str(c[k]) for k in cols2))
+    print("maintenance: " + ",".join(f"{k}={v}" for k, v in maint.items()))
+    fails = validate(query_rows, cycle_rows)
+    for f in fails:
+        print("VALIDATION-FAIL:", f)
+    if not fails:
+        print(f"DISCOVERY-VALIDATED: selective Table-I queries and "
+              f"substring/glob name search >= {NEED}x faster through "
+              f"the discovery index at {CORPUS} records, byte-identical "
+              "to the scan path, with the fresh->stale->fallback->"
+              "rebuilt cycle demonstrated on every layout")
+    return fails
+
+
+if __name__ == "__main__":
+    sys.exit(1 if main() else 0)

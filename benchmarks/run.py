@@ -20,6 +20,7 @@ BENCHES = [
     ("sharded_index", "benchmarks.bench_sharded"),
     ("reconcile", "benchmarks.bench_reconcile"),
     ("durable_pipeline", "benchmarks.bench_durable_pipeline"),
+    ("discovery", "benchmarks.bench_discovery"),
     ("fig3_5_scaling", "benchmarks.bench_scaling"),
     ("table1_queries", "benchmarks.bench_index_query"),
     ("roofline", "benchmarks.bench_roofline"),

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core import events as ev
 from repro.core import snapshot as snap
+from repro.core.dashboard import render_dashboard, scheduled_report
 from repro.core.event_ingest import EventIngestor, IngestConfig
 from repro.core.index import AggregateIndex, PrimaryIndex
 from repro.core.metadata import synth_filesystem
@@ -95,6 +96,23 @@ def main():
           f"{ing.metrics['tombstones']} tombstones)")
     print(f"query under freshness contract: {len(out['result'])} matches "
           f"at staleness {fr['staleness_s'] * 1e3:.1f} ms")
+
+    print("\n== 5. interactive discovery (secondary indexes, DESIGN.md §11) ==")
+    primary.attach_discovery()                  # sorted runs + trigrams
+    hits = q_live.query("find_by_name", r"/f1\d\d$")
+    print(f"find_by_name via {q_live.last_plan['route']} route: "
+          f"{len(hits['result'])} matches "
+          f"(index_lag={hits['freshness']['index_lag']})")
+    cold = q_live.not_accessed_since(180 * 86400)
+    print(f"cold-data window via {q_live.last_plan['route']} route: "
+          f"{len(cold)} candidates")
+
+    print("\n== 6. dashboards (clock pinned to the corpus epoch) ==")
+    rep = scheduled_report(q_live, active_uids=list(range(16)), now=1.7e9)
+    print(f"scheduled report at t={rep['generated_at']:.0f}: "
+          f"{rep['counts']}")
+    print(render_dashboard(primary, agg, k=3, now=1.7e9)
+          .splitlines()[0])
     print("\nOK")
 
 

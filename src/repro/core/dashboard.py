@@ -8,12 +8,10 @@ records, top-K usage views, and file-list reports for policy enforcement.
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, Optional, Sequence
 
-
 from repro.core.index import AggregateIndex, PrimaryIndex
-from repro.core.query import QueryEngine
+from repro.core.query import QueryEngine, resolve_now
 
 
 def _human_bytes(n: float) -> str:
@@ -24,11 +22,15 @@ def _human_bytes(n: float) -> str:
     return f"{n:.1f} PiB"
 
 
-def principal_summary(agg: AggregateIndex, principal: str) -> str:
-    """The paper's Fig 2c 'user summary' template."""
+def principal_summary(agg: AggregateIndex, principal: str,
+                      now=None) -> str:
+    """The paper's Fig 2c 'user summary' template. ``now`` is the
+    clock the access-age lines are computed against (None = wall
+    clock; pin a float for date-independent rendering)."""
     c = agg.get(principal)
     if c is None:
         return f"{principal}: no records"
+    t = resolve_now(now)
     s = c["size"]
     a = c["atime"]
     lines = [
@@ -38,8 +40,8 @@ def principal_summary(agg: AggregateIndex, principal: str) -> str:
         f"(mean {_human_bytes(s['mean'])}, p50 {_human_bytes(s['p50'])}, "
         f"p99 {_human_bytes(s['p99'])}, max {_human_bytes(s['max'])})",
         f"access age: median "
-        f"{(time.time() - a['p50']) / 86400 if a['p50'] > 0 else 0:.0f} d "
-        f"(oldest {(time.time() - a['min']) / 86400 if a['min'] > 0 else 0:.0f} d)",
+        f"{(t - a['p50']) / 86400 if a['p50'] > 0 else 0:.0f} d "
+        f"(oldest {(t - a['min']) / 86400 if a['min'] > 0 else 0:.0f} d)",
     ]
     return "\n".join(lines)
 
@@ -63,11 +65,15 @@ def top_storage_view(agg: AggregateIndex, k: int = 10,
 
 def scheduled_report(q: QueryEngine, *, retention_days: float = 730,
                      cold_days: float = 180, large: float = 100e9,
-                     active_uids: Optional[Sequence[int]] = None) -> Dict:
+                     active_uids: Optional[Sequence[int]] = None,
+                     now=None) -> Dict:
     """Policy-enforcement report (paper: 'file lists and scheduled reports
-    for policy enforcement and remediation')."""
+    for policy enforcement and remediation'). ``generated_at`` comes
+    from ``now`` (None = the engine's own query clock ``q.now``, so a
+    pinned engine stamps pinned reports); the time-window queries
+    themselves always evaluate against ``q.now``."""
     rep = {
-        "generated_at": time.time(),
+        "generated_at": q.now if now is None else resolve_now(now),
         "past_retention": q.past_retention(retention_days * 86400).tolist(),
         "world_writable": q.world_writable().tolist(),
         "large_cold": q.large_cold_files(large, cold_days * 86400).tolist(),
@@ -80,8 +86,7 @@ def scheduled_report(q: QueryEngine, *, retention_days: float = 730,
 
 
 def render_dashboard(primary: PrimaryIndex, agg: AggregateIndex,
-                     k: int = 5) -> str:
-    q = QueryEngine(primary, agg)
+                     k: int = 5, now=None) -> str:
     parts = [
         f"ICICLE DASHBOARD — {len(primary)} live objects, "
         f"{len(agg)} aggregate principals",
@@ -92,5 +97,5 @@ def render_dashboard(primary: PrimaryIndex, agg: AggregateIndex,
     ]
     users = [p for p in agg.records if p.startswith("user:")]
     if users:
-        parts += ["", principal_summary(agg, users[0])]
+        parts += ["", principal_summary(agg, users[0], now=now)]
     return "\n".join(parts)

@@ -1,0 +1,572 @@
+"""Discovery index: incrementally-maintained secondary indexes + the
+query planner's acceleration substrate (DESIGN.md §11).
+
+The paper's dual-index design pairs the aggregate index with an
+Elasticsearch-like *discovery* index for individual-file search; until
+this module, every selective Table-I query was a full O(n) scan of
+``PrimaryIndex.live()`` (and ``find_by_name`` a per-path Python regex
+loop). Robinhood (arXiv:1505.01448) answers the same policy queries from
+changelog-fed secondary structures; HAIL builds cheap per-partition
+sorted projections incrementally at write time. This module is that
+acceleration layer, per primary-index shard:
+
+- **Sorted columnar runs + zone maps** (``ColumnRun``) over the range/
+  set-predicate columns (``size``/``atime``/``mtime``/``uid``/``mode``):
+  LSM-style immutable projections — each run stores, per column, the
+  covered slots' values sorted ascending with the slot ids alongside,
+  plus a (min, max) zone map so a range query skips whole runs. Range
+  predicates binary-search a run; mask/set predicates sweep one packed
+  int32 array instead of materializing the full ``live()`` view.
+- **Trigram inverted index** (``TrigramRun``) over live path names:
+  CSR postings from 3-byte windows of each subject, so substring/glob
+  ``find_by_name`` intersects a few posting lists instead of running a
+  Python regex over every live path.
+- **Delta buffer**: mutations land as touched-slot ids (published by
+  the primary's mutation hooks — the event ingestor's version-gated
+  applies, repair batches, rename repaths all flow through them). Delta
+  slots are *always* candidates, so the index answers exactly while the
+  buffer fills; at ``merge_threshold`` the buffer folds into a fresh
+  immutable run built from the slots' CURRENT arena values (and their
+  paths into a trigram run). When runs pile past ``max_runs``, the
+  whole structure rebuilds from live rows.
+
+**Exactness contract**: discovery answers are *candidate prefilters*,
+verified row-by-row against the primary's arenas (alive mask + exact
+predicate re-evaluation) before anything is returned — results are
+byte-identical to the scan path, in the scan path's slot order. A run
+entry may be stale (the slot mutated since the run was built); that only
+costs a false candidate, never a miss, because every mutation also lands
+the slot in the delta buffer until a merge re-projects its current
+value. The planner invariant is: every live slot is covered by the last
+rebuild, a merged run, or the delta buffer.
+
+**Staleness / fallback**: mutations that bypass the incremental hooks
+(bulk snapshot ingest via ``invalidate_older``, ``load_state``) mark the
+shard STALE; compaction rebuilds in place (slot ids change). A stale
+shard answers no queries — the planner (core/query.py) transparently
+falls back to the scan path until ``rebuild()`` runs. Freshness is
+surfaced as the ``index_lag`` watermark mark (0 = discovery answers are
+exact) threaded through ``EventIngestor.freshness`` /
+``merge_freshness`` / ``Monitor``.
+
+Checkpoint/restore: discovery state is DERIVED (a pure function of the
+primary arenas + the delta schedule) and is not serialized; the durable
+pipeline deterministically rebuilds it on restore
+(core/stream_pipeline.py, DESIGN.md §11.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+#: columns with sorted-run + zone-map projections (a subset of
+#: PrimaryIndex.STANDARD_COLUMNS: the Table-I selective predicates)
+INDEXED_COLUMNS = {
+    "size": np.float32, "atime": np.float32, "mtime": np.float32,
+    "uid": np.int32, "mode": np.int32,
+}
+
+#: predicate ops the planner emits; every op has an exact verify form
+#: evaluated against the primary arenas (byte-identity with the scan)
+OPS = ("lt", "gt", "mask", "notin")
+
+
+@dataclasses.dataclass(frozen=True)
+class DiscoveryConfig:
+    """Tunables for the incremental-maintenance trade (write
+    amplification vs candidate-set size)."""
+
+    #: delta-buffer entries before folding into an immutable run
+    merge_threshold: int = 4096
+    #: runs before a full rebuild from live rows (read amplification cap)
+    max_runs: int = 8
+    #: vectorized trigram extraction processes at most this many byte
+    #: windows per chunk (bounds transient memory at build time)
+    chunk_windows: int = 4_000_000
+
+
+def _widen_lo(arg, dtype: np.dtype):
+    """Largest value of ``dtype`` guaranteed <= every x with x > arg:
+    run binary searches cast the operand to the column dtype, which can
+    round a float64 bound across stored float32 values — widen by one
+    ulp so the candidate slice over-includes and exact verify trims."""
+    if np.issubdtype(dtype, np.floating):
+        f = dtype.type(arg)
+        return np.nextafter(f, dtype.type(-np.inf))
+    return arg
+
+
+def _widen_hi(arg, dtype: np.dtype):
+    if np.issubdtype(dtype, np.floating):
+        f = dtype.type(arg)
+        return np.nextafter(f, dtype.type(np.inf))
+    return arg
+
+
+def eval_pred(vals: np.ndarray, op: str, arg) -> np.ndarray:
+    """EXACT predicate evaluation — shared by the verify step and (for
+    documentation symmetry) equal to what the scan path computes on the
+    ``live()`` columns. ``vals`` are raw arena values in storage dtype;
+    numpy's upcast rules then match the scan elementwise."""
+    if op == "lt":
+        return vals < arg
+    if op == "gt":
+        return vals > arg
+    if op == "mask":
+        return (vals & arg) != 0
+    if op == "notin":
+        return ~np.isin(vals, arg)
+    raise ValueError(f"unknown predicate op {op!r}")
+
+
+class ColumnRun:
+    """One immutable sorted projection over a fixed slot subset: per
+    indexed column, the covered slots' values sorted ascending with the
+    slot ids alongside, plus a (min, max) zone map for run pruning.
+    Values are frozen at build time — staleness is handled by the delta
+    buffer + exact verify, never by mutating a run."""
+
+    __slots__ = ("n", "vals", "slots", "zone")
+
+    def __init__(self, primary, slot_ids: np.ndarray):
+        self.n = len(slot_ids)
+        self.vals: Dict[str, np.ndarray] = {}
+        self.slots: Dict[str, np.ndarray] = {}
+        self.zone: Dict[str, Tuple[float, float]] = {}
+        for col, dt in INDEXED_COLUMNS.items():
+            arr = primary.columns.get(col)
+            v = (arr[slot_ids] if arr is not None
+                 else np.zeros(self.n, dt))
+            order = np.argsort(v, kind="stable")
+            v = v[order]
+            self.vals[col] = v
+            self.slots[col] = slot_ids[order]
+            self.zone[col] = ((v[0], v[-1]) if self.n
+                              else (np.inf, -np.inf))
+
+    def candidates(self, col: str, op: str, arg) -> np.ndarray:
+        """Slot ids of rows that MAY satisfy (col, op, arg) — a superset
+        of the true matches among this run's covered slots, computed on
+        the frozen projection (the caller verifies exactly)."""
+        vals, slots = self.vals[col], self.slots[col]
+        lo, hi = self.zone[col]
+        if op == "lt":
+            bound = _widen_hi(arg, vals.dtype)
+            if lo > bound:                      # zone map: skip the run
+                return slots[:0]
+            return slots[:np.searchsorted(vals, bound, side="right")]
+        if op == "gt":
+            bound = _widen_lo(arg, vals.dtype)
+            if hi < bound:
+                return slots[:0]
+            return slots[np.searchsorted(vals, bound, side="left"):]
+        # mask / notin: one packed-array sweep (no zone pruning — the
+        # predicates are not order-respecting), still far cheaper than
+        # materializing the full live() view
+        return slots[eval_pred(vals, op, arg)]
+
+
+# ---------------------------------------------------------------------------
+# trigram inverted index
+# ---------------------------------------------------------------------------
+
+def trigram_codes(text_bytes: bytes) -> List[int]:
+    """3-byte window codes of a byte string (b0<<16 | b1<<8 | b2)."""
+    return [(text_bytes[i] << 16) | (text_bytes[i + 1] << 8)
+            | text_bytes[i + 2] for i in range(len(text_bytes) - 2)]
+
+
+def _trigram_pairs(paths: np.ndarray, slot_ids: np.ndarray,
+                   chunk_windows: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(codes, slots) of every 3-byte window over every path —
+    vectorized via the fixed-width byte-matrix trick (the hashshard
+    input layout); non-ASCII batches fall back to a host loop over the
+    UTF-8 bytes, so the index is exact either way."""
+    n = len(paths)
+    if n == 0:
+        return np.zeros(0, np.int32), np.zeros(0, np.int64)
+    try:
+        b = np.array(paths if isinstance(paths, list) else list(paths),
+                     dtype=np.bytes_)
+    except UnicodeEncodeError:
+        codes: List[int] = []
+        slots: List[int] = []
+        for p, s in zip(paths, slot_ids):
+            cs = trigram_codes(p.encode("utf-8", "surrogatepass"))
+            codes.extend(cs)
+            slots.extend([int(s)] * len(cs))
+        return (np.asarray(codes, np.int32), np.asarray(slots, np.int64))
+    w = b.dtype.itemsize
+    if w < 3:
+        return np.zeros(0, np.int32), np.zeros(0, np.int64)
+    n_win = w - 2
+    rows_per_chunk = max(1, chunk_windows // n_win)
+    code_parts, slot_parts = [], []
+    u8_all = b.view(np.uint8).reshape(n, w)
+    lens = np.char.str_len(b).astype(np.int64)
+    for lo in range(0, n, rows_per_chunk):
+        hi = min(n, lo + rows_per_chunk)
+        u8 = u8_all[lo:hi].astype(np.int32)
+        codes = ((u8[:, :n_win] << 16) | (u8[:, 1:n_win + 1] << 8)
+                 | u8[:, 2:n_win + 2])
+        valid = (np.arange(n_win)[None, :] + 3) <= lens[lo:hi, None]
+        code_parts.append(codes[valid])
+        slot_parts.append(np.broadcast_to(
+            np.asarray(slot_ids[lo:hi], np.int64)[:, None],
+            (hi - lo, n_win))[valid])
+    return np.concatenate(code_parts), np.concatenate(slot_parts)
+
+
+class TrigramRun:
+    """Immutable CSR posting structure: trigram code -> slot ids, over a
+    fixed slot subset. Dead slots are filtered at verify time; renamed
+    subjects are delete+upsert pairs at the primary layer, so a slot's
+    path — and therefore its postings — never change."""
+
+    __slots__ = ("codes", "offsets", "postings")
+
+    def __init__(self, paths: np.ndarray, slot_ids: np.ndarray,
+                 chunk_windows: int):
+        codes, slots = _trigram_pairs(paths, slot_ids, chunk_windows)
+        order = np.argsort(codes, kind="stable")
+        codes, slots = codes[order], slots[order]
+        self.codes, starts = np.unique(codes, return_index=True)
+        self.offsets = np.append(starts, len(codes)).astype(np.int64)
+        self.postings = slots
+
+    def lookup(self, code: int) -> np.ndarray:
+        i = int(np.searchsorted(self.codes, code))
+        if i >= len(self.codes) or self.codes[i] != code:
+            return self.postings[:0]
+        return self.postings[self.offsets[i]:self.offsets[i + 1]]
+
+
+# ---------------------------------------------------------------------------
+# literal extraction (the trigram planner's input)
+# ---------------------------------------------------------------------------
+
+def regex_literals(pattern: str) -> List[str]:
+    """Literal substrings GUARANTEED to appear in any match of
+    ``pattern`` — conservatively parsed from the ``re`` parse tree
+    (top-level literal runs; groups and min>=1 repeats recurse;
+    alternations/options/classes contribute nothing). An empty list
+    means the planner cannot use the trigram index and must scan."""
+    try:
+        try:
+            from re import _parser as sp       # 3.11+
+        except ImportError:                     # pragma: no cover
+            import sre_parse as sp
+        tree = sp.parse(pattern)
+    except Exception:
+        return []
+    import re as _re
+    if tree.state.flags & (_re.IGNORECASE | _re.LOCALE):
+        return []                               # case games: scan
+
+    def walk(seq) -> List[str]:
+        lits: List[str] = []
+        cur: List[str] = []
+
+        def flush():
+            if cur:
+                lits.append("".join(cur))
+                cur.clear()
+
+        for op, arg in seq:
+            name = str(op)
+            if name == "LITERAL":
+                cur.append(chr(arg))
+            elif name == "AT":                  # anchors break runs only
+                flush()
+            elif name in ("MAX_REPEAT", "MIN_REPEAT"):
+                flush()
+                lo_rep = arg[0]
+                if lo_rep >= 1:                 # body occurs at least once
+                    lits.extend(walk(arg[2]))
+            elif name == "SUBPATTERN":
+                flush()
+                if arg[1] == 0 and arg[2] == 0:  # no inline flag changes
+                    lits.extend(walk(arg[3]))
+            else:                               # IN/ANY/BRANCH/...: unknown
+                flush()
+        flush()
+        return lits
+
+    return [l for l in walk(tree) if l]
+
+
+def glob_literals(pattern: str) -> List[str]:
+    """Literal runs of an fnmatch-style glob: broken at ``*``/``?``,
+    and the CONTENTS of a ``[...]`` character class are skipped — the
+    class matches one character, so e.g. ``*[abc]*`` guarantees no
+    ``"abc"`` substring (an unterminated ``[`` conservatively swallows
+    the rest: fewer literals only means less pruning, never a miss)."""
+    out, cur = [], []
+    i, n = 0, len(pattern)
+    while i < n:
+        ch = pattern[i]
+        if ch == "[":
+            if cur:
+                out.append("".join(cur))
+                cur.clear()
+            # fnmatch class syntax: '!' negates; a ']' first is literal
+            j = i + 1
+            if j < n and pattern[j] == "!":
+                j += 1
+            if j < n and pattern[j] == "]":
+                j += 1
+            while j < n and pattern[j] != "]":
+                j += 1
+            i = j + 1                      # past ']' (or past the end)
+        elif ch in "*?":
+            if cur:
+                out.append("".join(cur))
+                cur.clear()
+            i += 1
+        else:
+            cur.append(ch)
+            i += 1
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def literal_trigrams(literals: Sequence[str]) -> List[int]:
+    """Distinct trigram codes implied by the literals (UTF-8 bytes —
+    the same encoding the path postings use). Empty when no literal
+    carries a full 3-byte window (the index can't constrain)."""
+    codes = set()
+    for lit in literals:
+        codes.update(trigram_codes(lit.encode("utf-8", "surrogatepass")))
+    return sorted(codes)
+
+
+# ---------------------------------------------------------------------------
+# the per-shard discovery index
+# ---------------------------------------------------------------------------
+
+class ShardDiscovery:
+    """Secondary indexes over ONE ``PrimaryIndex`` (a monolith, or one
+    shard of a ``ShardedPrimaryIndex``), maintained incrementally from
+    the primary's mutation hooks (``PrimaryIndex._mutated``). See the
+    module docstring for the structure and the exactness contract."""
+
+    def __init__(self, primary, cfg: Optional[DiscoveryConfig] = None):
+        self.primary = primary
+        self.cfg = cfg or DiscoveryConfig()
+        self.runs: List[ColumnRun] = []
+        self.tri_runs: List[TrigramRun] = []
+        self._delta: List[np.ndarray] = []
+        self._delta_n = 0
+        self._stale = True
+        self._synced_epoch = -1
+        self.stats = {"rebuilds": 0, "merges": 0, "noted": 0,
+                      "invalidations": 0}
+
+    # -- maintenance protocol (called by the primary's hooks) ----------------
+
+    def mark_synced(self, epoch: int) -> None:
+        """Record the primary epoch this index is caught up to. A
+        no-op while stale: the sync mark must keep pointing at the
+        last epoch actually reflected in queryable state, so ``lag()``
+        counts every mutation since the invalidation instead of
+        pinning at 1 (only ``rebuild`` re-arms the mark)."""
+        if not self._stale:
+            self._synced_epoch = int(epoch)
+
+    def invalidate(self) -> None:
+        """A mutation the incremental path cannot describe slot-by-slot
+        happened (bulk snapshot ingest, ``load_state``): drop
+        everything and answer nothing until ``rebuild()``."""
+        self._stale = True
+        self.runs = []
+        self.tri_runs = []
+        self._delta = []
+        self._delta_n = 0
+        self.stats["invalidations"] += 1
+
+    def note_slots(self, slot_ids: np.ndarray) -> None:
+        """Record touched slots from one primary mutation (the delta
+        publication). Safe to over-note: a noted slot is merely
+        re-verified. No-op while stale (nothing to keep fresh)."""
+        if self._stale:
+            return
+        arr = np.unique(np.asarray(slot_ids, np.int64))
+        if not len(arr):
+            return
+        self._delta.append(arr)
+        self._delta_n += len(arr)
+        self.stats["noted"] += len(arr)
+        if self._delta_n >= self.cfg.merge_threshold:
+            self.merge_delta()
+
+    def merge_delta(self) -> None:
+        """Fold the delta buffer into a fresh immutable run pair built
+        from the slots' CURRENT arena values/paths (LSM minor
+        compaction). Slots whose value changed since an older run now
+        have a current projection; the old entries remain as false
+        candidates only."""
+        if self._stale or not self._delta_n:
+            return
+        slots = self.delta_slots()
+        self._delta = []
+        self._delta_n = 0
+        self.runs.append(ColumnRun(self.primary, slots))
+        self.tri_runs.append(TrigramRun(self.primary.paths[slots], slots,
+                                        self.cfg.chunk_windows))
+        self.stats["merges"] += 1
+        if len(self.runs) > self.cfg.max_runs:
+            self.rebuild()                      # LSM major compaction
+
+    def rebuild(self) -> None:
+        """Rebuild from live rows: one run covering every live slot, an
+        empty delta, freshness re-armed. Deterministic given the
+        arenas — the restore path relies on that (DESIGN.md §11.4)."""
+        p = self.primary
+        n = len(p.slot_map)
+        live = np.nonzero(p.alive[:n])[0].astype(np.int64)
+        self.runs = [ColumnRun(p, live)] if len(live) else []
+        self.tri_runs = ([TrigramRun(p.paths[live], live,
+                                     self.cfg.chunk_windows)]
+                         if len(live) else [])
+        self._delta = []
+        self._delta_n = 0
+        self._stale = False
+        self._synced_epoch = p.mutation_epoch
+        self.stats["rebuilds"] += 1
+
+    # -- freshness -----------------------------------------------------------
+
+    @property
+    def fresh(self) -> bool:
+        """True iff this index may answer queries: not invalidated, and
+        it has observed every primary mutation (epoch lock-step)."""
+        return (not self._stale
+                and self._synced_epoch == self.primary.mutation_epoch)
+
+    def lag(self) -> int:
+        """Primary mutations not reflected in queryable state: 0 means
+        discovery answers are exact (the ``index_lag`` freshness mark);
+        delta-buffered slots do NOT lag — they are always candidates."""
+        if self.fresh:
+            return 0
+        return max(1, self.primary.mutation_epoch - self._synced_epoch)
+
+    def delta_slots(self) -> np.ndarray:
+        if not self._delta:
+            return np.zeros(0, np.int64)
+        return np.unique(np.concatenate(self._delta))
+
+    def slot_coverage(self) -> Dict[str, int]:
+        return {"runs": len(self.runs),
+                "run_slots": sum(r.n for r in self.runs),
+                "delta_slots": int(self._delta_n),
+                "tri_runs": len(self.tri_runs)}
+
+    # -- query surface (candidate prefilter -> exact verify) -----------------
+
+    def _intersect_with_delta(self, per_key_candidates) -> np.ndarray:
+        """Shared candidate combinator: intersect the per-key candidate
+        lists (each an iterable of run-candidate arrays for one
+        predicate/trigram; every key must hold), then union the delta
+        slots — whose run projections may be stale, so they are
+        candidates unconditionally. Returns sorted unique slot ids."""
+        inter: Optional[np.ndarray] = None
+        for arrays in per_key_candidates:
+            c = (np.unique(np.concatenate(arrays)) if arrays
+                 else np.zeros(0, np.int64))
+            inter = c if inter is None else np.intersect1d(
+                inter, c, assume_unique=True)
+            if not len(inter):
+                break
+        if inter is None:
+            inter = np.zeros(0, np.int64)
+        delta = self.delta_slots()
+        return np.union1d(inter, delta) if len(delta) else inter
+
+    def candidates(self, preds: Sequence[Tuple[str, str, object]]
+                   ) -> np.ndarray:
+        """Sorted unique slot ids that MAY satisfy every predicate."""
+        return self._intersect_with_delta(
+            [r.candidates(col, op, arg) for r in self.runs]
+            for col, op, arg in preds)
+
+    def select(self, preds: Sequence[Tuple[str, str, object]]
+               ) -> np.ndarray:
+        """Paths satisfying every predicate, byte-identical to the scan
+        path over this primary: candidates verified against the live
+        arenas (alive mask + exact predicate), returned in slot order
+        (== ``live()`` row order)."""
+        cand = self.candidates(preds)
+        self.stats["last_candidates"] = len(cand)
+        if not len(cand):
+            return self.primary.paths[:0].copy()
+        # fancy indexing materializes fresh arrays — no defensive copies
+        keep = self.primary.alive[cand]
+        for col, op, arg in preds:
+            arr = self.primary.columns.get(col)
+            vals = (arr[cand] if arr is not None
+                    else np.zeros(len(cand), INDEXED_COLUMNS[col]))
+            keep &= eval_pred(vals, op, arg)
+        return self.primary.paths[cand[keep]]
+
+    def name_candidates(self, codes: Sequence[int]) -> np.ndarray:
+        """Sorted unique slot ids whose path MAY contain every trigram:
+        posting-list intersection across runs, unioned with the delta
+        (not yet projected into trigram runs)."""
+        return self._intersect_with_delta(
+            [r.lookup(code) for r in self.tri_runs] for code in codes)
+
+    def name_select(self, codes: Sequence[int], match) -> np.ndarray:
+        """Paths whose subject satisfies ``match`` (an exact
+        str -> bool verifier — the compiled regex / fnmatch), prefiltered
+        through the trigram postings; byte-identical to the scan."""
+        cand = self.name_candidates(codes)
+        self.stats["last_candidates"] = len(cand)
+        if not len(cand):
+            return self.primary.paths[:0].copy()
+        alive = self.primary.alive[cand]
+        cand = cand[alive]
+        paths = self.primary.paths[cand]
+        keep = [i for i, p in enumerate(paths) if match(p)]
+        return paths[keep]
+
+
+# ---------------------------------------------------------------------------
+# layout helpers (monolith vs sharded — the planner's entry points)
+# ---------------------------------------------------------------------------
+
+def discovery_shards(primary) -> Optional[List[ShardDiscovery]]:
+    """The discovery indexes covering ``primary`` in shard order, or
+    None when any shard has none attached (the planner then scans)."""
+    shards = getattr(primary, "shards", None)
+    if shards is None:
+        d = getattr(primary, "discovery", None)
+        return None if d is None else [d]
+    ds = [getattr(sh, "discovery", None) for sh in shards]
+    return None if any(d is None for d in ds) else ds
+
+
+def index_lag(primary) -> int:
+    """Deployment-wide ``index_lag`` freshness mark: primary mutations
+    not reflected in queryable discovery state, summed over shards
+    (0 = accelerated queries are exact; 0 also when no discovery index
+    is attached — there is nothing lagging to wait for)."""
+    ds = discovery_shards(primary)
+    if ds is None:
+        return 0
+    return sum(d.lag() for d in ds)
+
+
+def rebuild_discovery(primary) -> int:
+    """Rebuild every attached discovery shard from live rows (the
+    restore / post-snapshot hook). Returns shards rebuilt (0 = none
+    attached)."""
+    ds = discovery_shards(primary)
+    if ds is None:
+        return 0
+    for d in ds:
+        d.rebuild()
+    return len(ds)

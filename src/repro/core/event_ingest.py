@@ -45,6 +45,14 @@ changelog seq folded into the indexes, the number of buffered-but-unapplied
 events, and the staleness clock. QueryEngine surfaces it next to query
 results (DESIGN.md §6.3).
 
+Discovery-index maintenance (DESIGN.md §11): every apply's primary
+mutations — version-gated upserts, tombstones, rename repaths, repair
+batches — publish their touched slots into any attached
+``discovery.ShardDiscovery`` delta buffers through the primary's
+mutation hooks, so replay/repair/rename flows keep the secondary
+indexes exact without this module special-casing them; ``freshness()``
+exports the resulting ``index_lag`` mark.
+
 What a reader observes mid-ingest: the primary index is updated between
 ``ingest()`` calls only; within one applied batch, upserts land before
 tombstones, and aggregate summaries republish after the primary columns —
@@ -68,6 +76,7 @@ import numpy as np
 from repro.core import events as ev
 from repro.core import metadata as md
 from repro.core import snapshot as snap
+from repro.core.discovery import index_lag as discovery_index_lag
 from repro.core.index import (AggregateIndex, PrimaryIndex, bucket_pow2,
                               pack_array, pad_1d, unpack_array)
 from repro.core.sketches import ddsketch as dds
@@ -395,7 +404,18 @@ class EventIngestor:
         commit-after-apply it bounds how much replay a crash-restart
         would re-run, and for readers it is the freshness gap BEYOND
         ``pending_events`` — records the broker holds that this index
-        has not even buffered yet (DESIGN.md §10.4)."""
+        has not even buffered yet (DESIGN.md §10.4).
+
+        ``index_lag`` is the discovery-index freshness mark (DESIGN.md
+        §11.3): primary mutations not reflected in queryable secondary-
+        index state, summed over shards. 0 means the query planner's
+        accelerated answers are exact (every apply this ingestor runs
+        publishes its touched slots into the discovery delta buffers
+        through the primary's version-gated mutation hooks, so the mark
+        stays 0 under pure event flow); nonzero means discovery was
+        invalidated (bulk snapshot ingest, state restore) and selective
+        queries are scanning until a rebuild. Also 0 when no discovery
+        index is attached."""
         return {
             "mode": self.cfg.mode,
             "applied_seq": self.watermark.applied_seq,
@@ -405,6 +425,7 @@ class EventIngestor:
             "applied_batches": self.watermark.applied_batches,
             "reconciled_at": self.watermark.reconciled_at,
             "log_lag": int(self.lag_source()) if self.lag_source else 0,
+            "index_lag": discovery_index_lag(self.primary),
         }
 
     # -- checkpoint / restore (DESIGN.md §10.3) -------------------------------

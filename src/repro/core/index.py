@@ -203,6 +203,48 @@ class PrimaryIndex:
     #: replay or pre-compaction scan cannot resurrect a compacted-away
     #: delete (DESIGN.md §9.2)
     tombstone_floor: int = 0
+    #: monotone counter of mutating operations — the discovery index's
+    #: freshness clock: an attached discovery.ShardDiscovery is exact
+    #: iff it has observed every epoch (DESIGN.md §11.3). NOT
+    #: serialized: restore invalidates and rebuilds derived state.
+    mutation_epoch: int = 0
+    #: optional attached discovery.ShardDiscovery (secondary indexes);
+    #: every mutating op below publishes touched slots into it via
+    #: ``_mutated`` — structural rewrites invalidate instead
+    discovery: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def _mutated(self, slots: Optional[np.ndarray] = None) -> None:
+        """Epoch bump + delta publication to the attached discovery
+        index. ``slots=None`` means the mutation cannot be described
+        slot-by-slot (bulk snapshot ingest / state load) — the
+        discovery state is invalidated and the planner falls back to
+        scans until a rebuild. Called at the END of each mutating op,
+        so a triggered delta merge reads consistent arenas."""
+        self.mutation_epoch += 1
+        d = self.discovery
+        if d is None:
+            return
+        if slots is None:
+            d.invalidate()
+        else:
+            d.note_slots(slots)
+        d.mark_synced(self.mutation_epoch)
+
+    def attach_discovery(self, cfg=None):
+        """Create + attach a discovery.ShardDiscovery over this index
+        and build it from the current live rows (fresh immediately).
+        Returns the discovery index (also at ``self.discovery``)."""
+        from repro.core.discovery import ShardDiscovery
+        self.discovery = ShardDiscovery(self, cfg)
+        self.discovery.rebuild()
+        return self.discovery
+
+    def rebuild_discovery(self) -> None:
+        """Rebuild the attached discovery index from live rows (no-op
+        when none attached) — the post-snapshot / post-restore hook."""
+        if self.discovery is not None:
+            self.discovery.rebuild()
 
     @property
     def _slot(self):
@@ -325,6 +367,7 @@ class PrimaryIndex:
                 self.columns[k][slot] = v
             self.version[slot] = version
             self.alive[slot] = True
+        self._mutated(np.array([slot], np.int64))
         return new
 
     def upsert(self, path: str, fields: Dict, version: int) -> None:
@@ -342,6 +385,7 @@ class PrimaryIndex:
         if slot is not None and version >= self.version[slot]:
             self.alive[slot] = False
             self.version[slot] = version
+            self._mutated(np.array([slot], np.int64))
 
     # -- batched event-path mutations (paper §IV-B3; DESIGN.md §6) ------------
 
@@ -405,6 +449,9 @@ class PrimaryIndex:
         if len(idx):
             _, first_pos = np.unique(slots[idx], return_index=True)
             out[idx[first_pos]] = True
+        # discovery delta: every touched slot (gated rows included —
+        # over-noting only costs a re-verify, never a wrong answer)
+        self._mutated(slots)
         return out
 
     def delete_batch(self, paths: Sequence[str],
@@ -427,6 +474,8 @@ class PrimaryIndex:
         sel = s[ok]
         self.alive[sel] = False
         self.version[sel] = versions[ok]
+        if known.any():
+            self._mutated(s[known])
         return was_alive
 
     def invalidate_older(self, version: int) -> int:
@@ -439,6 +488,11 @@ class PrimaryIndex:
         stale = self.alive[:n] & (self.version[:n] < version)
         self.alive[:n] &= ~stale
         self.version[:n][stale] = version
+        # a snapshot speaks for the WHOLE namespace (and ingest_columns
+        # lands here after its bulk writes): the attached discovery
+        # index cannot absorb that slot-by-slot — invalidate; drivers
+        # rebuild_discovery() after the load (DESIGN.md §11.3)
+        self._mutated(None)
         return int(stale.sum())
 
     # -- tombstone compaction (DESIGN.md §9.2) --------------------------------
@@ -496,6 +550,12 @@ class PrimaryIndex:
                                      self.columns.get("path_hash"))
         assert new_mask.all() and len(new_map) == len(self.paths)
         self.slot_map = new_map
+        # slot ids just changed under every discovery run: invalidate
+        # and rebuild from the (now live-only) rows so the planner keeps
+        # accelerating across compactions (DESIGN.md §11.3)
+        self.mutation_epoch += 1
+        if self.discovery is not None:
+            self.discovery.rebuild()
         return dead
 
     # -- checkpoint / restore (DESIGN.md §10.3) -------------------------------
@@ -538,6 +598,9 @@ class PrimaryIndex:
         self.version = unpack_array(state["version"])
         self.alive = unpack_array(state["alive"])
         self.tombstone_floor = int(state["tombstone_floor"])
+        # discovery state is derived, not serialized: invalidate here;
+        # the restore path rebuilds deterministically (DESIGN.md §11.4)
+        self._mutated(None)
 
     @classmethod
     def from_state(cls, state: Dict, slot_map_factory=None) -> "PrimaryIndex":

@@ -161,6 +161,10 @@ class Monitor:
             # uncommitted events behind a durable-pipeline ingestor
             # (core/stream_pipeline.py); 0 when direct-fed
             out["log_lag"] = fr.get("log_lag", 0)
+            # discovery-index freshness (core/discovery.py): 0 = the
+            # planner's accelerated queries are exact (or no discovery
+            # index attached); nonzero = scans until a rebuild
+            out["index_lag"] = fr.get("index_lag", 0)
         return out
 
 
@@ -205,4 +209,5 @@ class MonitorPool:
             out["pending_events"] = fr["pending_events"]
             out["reconciled_at"] = fr.get("reconciled_at", 0.0)
             out["log_lag"] = fr.get("log_lag", 0)
+            out["index_lag"] = fr.get("index_lag", 0)
         return out

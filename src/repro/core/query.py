@@ -22,13 +22,24 @@ ingestor's ``buffered`` mode).
 """
 from __future__ import annotations
 
+import fnmatch
 import re
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import discovery as disc
 from repro.core.index import AggregateIndex, PrimaryIndex
+
+
+def resolve_now(now) -> float:
+    """One clock-resolution rule for every ``now`` knob (QueryEngine,
+    the dashboard renderers): None reads ``time.time`` at call time, a
+    float pins a deterministic clock, a callable supplies your own."""
+    if now is None:
+        return time.time()
+    return float(now()) if callable(now) else float(now)
 
 
 def merge_freshness(marks: Sequence[Dict[str, float]]
@@ -53,6 +64,10 @@ def merge_freshness(marks: Sequence[Dict[str, float]]
         # partitions, like pending_events (DESIGN.md §10.4; 0 on
         # direct-fed ingestors or marks predating the pipeline)
         "log_lag": sum(m.get("log_lag", 0) for m in marks),
+        # primary mutations not yet reflected in queryable discovery
+        # state (DESIGN.md §11.3; 0 = accelerated queries are exact,
+        # also 0 when no discovery index is attached)
+        "index_lag": sum(m.get("index_lag", 0) for m in marks),
         "sources": len(marks),
     }
 
@@ -81,8 +96,7 @@ class QueryEngine:
     @property
     def now(self) -> float:
         """The query clock: re-read per access when callable-backed."""
-        n = self._now
-        return float(n()) if callable(n) else float(n)
+        return resolve_now(self._now)
 
     @now.setter
     def now(self, value) -> None:
@@ -102,12 +116,89 @@ class QueryEngine:
             return merge_freshness([i.freshness() for i in self.ingestor])
         return self.ingestor.freshness()
 
+    #: the ONLY names ``query()`` dispatches — the web interface's raw
+    #: query surface must not reach arbitrary attributes (``now``,
+    #: private helpers, the index objects themselves)
+    QUERY_METHODS = frozenset({
+        "stat", "find_by_name", "find_by_glob", "world_writable",
+        "not_accessed_since", "large_cold_files", "duplicate_candidates",
+        "owned_by_deleted_users", "past_retention", "directories_over",
+        "storage_by_project", "quota_pressure", "most_small_files",
+        "per_user_usage", "dir_size_percentile", "top_storage_users",
+    })
+
     def query(self, name: str, *args, **kw) -> Dict:
         """Run a named query and stamp the result with the freshness
         watermark it was read at — the shape the paper's web interface
-        returns ({"result": ..., "freshness": {...}})."""
+        returns ({"result": ..., "freshness": {...}}). ``name`` must be
+        in ``QUERY_METHODS`` (raw web-interface input must not dispatch
+        to arbitrary engine attributes)."""
+        if name not in self.QUERY_METHODS:
+            raise ValueError(
+                f"unknown query {name!r}; expected one of "
+                f"{sorted(self.QUERY_METHODS)}")
         fn = getattr(self, name)
         return {"result": fn(*args, **kw), "freshness": self.freshness()}
+
+    # -- the discovery-index planner (DESIGN.md §11.3) ------------------------
+    #
+    # Each selective primary-index query below first asks the planner
+    # for an accelerated answer: candidate prefilter through the
+    # discovery index's sorted runs / trigram postings, exact verify
+    # against the primary arenas. The planner routes to the index ONLY
+    # when every shard's discovery index is attached and fresh;
+    # otherwise it transparently falls back to the scan path. Either
+    # route returns byte-identical results (tests/test_discovery.py
+    # pins this property across corpora, delta fill, staleness, and
+    # shard counts). ``last_plan`` records the routing decision.
+
+    #: routing record of the most recent plannable query:
+    #: {"query", "route": "discovery"|"scan", "reason", "candidates"}
+    last_plan: Optional[Dict] = None
+
+    def _discovery_route(self):
+        """(shard discovery list, reason) — list is None on fallback."""
+        ds = disc.discovery_shards(self.primary)
+        if ds is None:
+            return None, "no discovery index attached"
+        if not all(d.fresh for d in ds):
+            return None, "discovery index stale (pending rebuild)"
+        return ds, "fresh"
+
+    def _plan(self, qname: str, shard_query) -> Optional[np.ndarray]:
+        """Common planner tail: route check, per-shard fan-out +
+        shard-order merge (== the scan's shard-major row order), and
+        the ``last_plan`` record. None -> caller scans."""
+        ds, reason = self._discovery_route()
+        if ds is None:
+            self.last_plan = {"query": qname, "route": "scan",
+                              "reason": reason}
+            return None
+        parts = [shard_query(d) for d in ds]
+        self.last_plan = {
+            "query": qname, "route": "discovery", "reason": reason,
+            "candidates": sum(d.stats.get("last_candidates", 0)
+                              for d in ds)}
+        return parts[0] if len(parts) == 1 else np.concatenate(parts)
+
+    def _plan_select(self, qname: str,
+                     preds: Sequence[Tuple[str, str, object]]
+                     ) -> Optional[np.ndarray]:
+        """Accelerated predicate query, or None -> caller scans."""
+        return self._plan(qname, lambda d: d.select(preds))
+
+    def _plan_names(self, qname: str, literals: Sequence[str],
+                    match) -> Optional[np.ndarray]:
+        """Accelerated name query: trigram candidates from the
+        literals guaranteed in any match, verified by ``match`` (the
+        exact compiled matcher). None -> caller scans (no usable
+        literal, or discovery unavailable/stale)."""
+        codes = disc.literal_trigrams(literals)
+        if not codes:
+            self.last_plan = {"query": qname, "route": "scan",
+                              "reason": "no literal >= 3 bytes in pattern"}
+            return None
+        return self._plan(qname, lambda d: d.name_select(codes, match))
 
     # -- individual-granularity queries (primary index) ----------------------
 
@@ -118,29 +209,65 @@ class QueryEngine:
         return self.primary.lookup(path)
 
     def find_by_name(self, pattern: str) -> np.ndarray:
-        """name LIKE "*pattern*" (regex-match raw mode). Scans the
-        path-only live view (``live_paths``) — no full-column
-        materialization — with the regex compiled once and its bound
-        ``search`` applied in a single comprehension pass."""
-        paths = self.primary.live_paths()
+        """name LIKE "*pattern*" (regex-match raw mode). Planner: the
+        literals guaranteed in any match prefilter through the trigram
+        index; each candidate is verified with the real compiled regex,
+        so results are byte-identical to the scan. Fallback (stale
+        index / no >=3-byte literal): scan the path-only live view
+        (``live_paths``) — no full-column materialization — with the
+        regex compiled once and its bound ``search`` applied in a
+        single comprehension pass."""
         search = re.compile(pattern).search
+        got = self._plan_names("find_by_name", disc.regex_literals(pattern),
+                               lambda p: search(p) is not None)
+        if got is not None:
+            return got
+        paths = self.primary.live_paths()
         return paths[[i for i, p in enumerate(paths) if search(p)]]
+
+    def find_by_glob(self, pattern: str) -> np.ndarray:
+        """name LIKE a shell glob (the web interface's non-regex search
+        box). Same planner/fallback split as ``find_by_name``, with
+        ``fnmatch.fnmatchcase`` as the exact verifier."""
+        got = self._plan_names(
+            "find_by_glob", disc.glob_literals(pattern),
+            lambda p: fnmatch.fnmatchcase(p, pattern))
+        if got is not None:
+            return got
+        paths = self.primary.live_paths()
+        return paths[[i for i, p in enumerate(paths)
+                      if fnmatch.fnmatchcase(p, pattern)]]
 
     def world_writable(self) -> np.ndarray:
         """Table I "world-writable files" (security audit): mode & 0o002.
-        Reads the live() snapshot of the primary index."""
+        Planner: mode-run sweep + exact verify; fallback reads the
+        live() snapshot of the primary index."""
+        got = self._plan_select("world_writable", [("mode", "mask", 0o002)])
+        if got is not None:
+            return got
         live = self.primary.live()
         return live["path"][(live["mode"] & 0o002) != 0]
 
     def not_accessed_since(self, seconds: float) -> np.ndarray:
         """Table I "not accessed in N months" (cold-data candidates)."""
+        cutoff = self.now - seconds
+        got = self._plan_select("not_accessed_since",
+                                [("atime", "lt", cutoff)])
+        if got is not None:
+            return got
         live = self.primary.live()
-        return live["path"][live["atime"] < self.now - seconds]
+        return live["path"][live["atime"] < cutoff]
 
     def large_cold_files(self, min_size: float, idle_seconds: float) -> np.ndarray:
         """Table I "large files with low access" (tiering candidates)."""
+        cutoff = self.now - idle_seconds
+        got = self._plan_select("large_cold_files",
+                                [("size", "gt", min_size),
+                                 ("atime", "lt", cutoff)])
+        if got is not None:
+            return got
         live = self.primary.live()
-        m = (live["size"] > min_size) & (live["atime"] < self.now - idle_seconds)
+        m = (live["size"] > min_size) & (live["atime"] < cutoff)
         return live["path"][m]
 
     def duplicate_candidates(self) -> Dict[int, np.ndarray]:
@@ -160,13 +287,22 @@ class QueryEngine:
 
     def owned_by_deleted_users(self, active_uids: Sequence[int]) -> np.ndarray:
         """Table I "files owned by deleted users" (orphan sweep)."""
+        uids = list(active_uids)
+        got = self._plan_select("owned_by_deleted_users",
+                                [("uid", "notin", uids)])
+        if got is not None:
+            return got
         live = self.primary.live()
-        return live["path"][~np.isin(live["uid"], list(active_uids))]
+        return live["path"][~np.isin(live["uid"], uids)]
 
     def past_retention(self, retention_seconds: float) -> np.ndarray:
         """Table I "past retention policy" (purge candidates)."""
+        cutoff = self.now - retention_seconds
+        got = self._plan_select("past_retention", [("mtime", "lt", cutoff)])
+        if got is not None:
+            return got
         live = self.primary.live()
-        return live["path"][live["mtime"] < self.now - retention_seconds]
+        return live["path"][live["mtime"] < cutoff]
 
     # -- aggregate-granularity queries (aggregate index) ----------------------
 

@@ -29,6 +29,14 @@ long-lived indexes slow:
   the principals the dead rows touched are republished out of the
   aggregate index with exact counts (zero-count ghosts dropped).
 
+Discovery-index interaction (DESIGN.md §11.3): repair batches flow
+through the same primary mutations an event batch uses, so an attached
+``discovery.ShardDiscovery`` absorbs them as ordinary deltas and stays
+fresh across a reconcile; compaction renumbers slots, so
+``PrimaryIndex.compact`` invalidates and rebuilds the attached
+discovery state from the surviving live rows — a compacted shard keeps
+accelerating without any caller involvement.
+
 ``benchmarks/bench_reconcile.py`` validates the two performance claims:
 scan-query throughput after compacting a heavily-tombstoned index, and
 reconcile cost vs a from-scratch rebuild at low drift.

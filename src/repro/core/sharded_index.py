@@ -420,6 +420,21 @@ class ShardedPrimaryIndex:
     def invalidate_older(self, version: int) -> int:
         return sum(sh.invalidate_older(version) for sh in self.shards)
 
+    # -- discovery (secondary indexes; DESIGN.md §11) -------------------------
+
+    def attach_discovery(self, cfg=None) -> List:
+        """Attach one discovery.ShardDiscovery per shard (built fresh
+        from each shard's live rows). The planner (core/query.py)
+        accelerates scatter-gather queries only when EVERY shard's
+        discovery index is attached and fresh."""
+        return [sh.attach_discovery(cfg) for sh in self.shards]
+
+    def rebuild_discovery(self) -> None:
+        """Rebuild every attached per-shard discovery index from live
+        rows — the post-snapshot-ingest / post-restore hook."""
+        for sh in self.shards:
+            sh.rebuild_discovery()
+
     def slot_stats(self) -> Dict[str, float]:
         """Deployment-wide arena occupancy (per-shard stats summed; the
         dead fraction is over ALL assigned slots)."""

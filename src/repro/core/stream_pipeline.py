@@ -45,6 +45,7 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.core import events as ev
+from repro.core.discovery import rebuild_discovery
 from repro.core.eventlog import EventLog
 from repro.core.index import atomic_write_blob, read_blob
 from repro.core.sharded_index import path_hashes
@@ -346,7 +347,12 @@ class DurablePipeline:
         after a mid-checkpoint crash barriers at the same position the
         original attempt did — which keeps the buffered-mode apply
         windows, and therefore recovered record versions, identical to
-        an uninterrupted run's (DESIGN.md §10.2)."""
+        an uninterrupted run's (DESIGN.md §10.2).
+
+        Attached discovery indexes are NOT serialized: their state is a
+        pure function of the checkpointed arenas plus the replayed
+        suffix, so ``load_checkpoint`` rebuilds them deterministically
+        instead (DESIGN.md §11.4)."""
         self.pump()
         self.flush()
         barrier = {c.partition: c.position for c in self.consumers}
@@ -380,6 +386,11 @@ class DurablePipeline:
                              f"this pipeline consumes {self.topic_name!r}")
         self.ingestor.primary.load_state(obj["index"])
         self.ingestor.load_state(obj["ingestor"])
+        # discovery state is DERIVED (checkpoints never carry it):
+        # rebuild deterministically from the restored arenas, so the
+        # planner accelerates again right after restore and the suffix
+        # replay below maintains it incrementally (DESIGN.md §11.4)
+        rebuild_discovery(self.ingestor.primary)
         # producer-side routing table: rebound from the restored name
         # bindings so post-recovery produces keep per-subject partition
         # affinity instead of falling back to '#fid' keys

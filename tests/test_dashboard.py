@@ -59,3 +59,36 @@ def test_scheduled_report_counts():
                                   "large_cold", "orphaned"}
     # world-writable list must match the primary-index predicate
     assert rep["counts"]["world_writable"] == len(q.world_writable())
+
+
+def test_injectable_clock_pins_rendering():
+    """ISSUE 5 satellite: dashboards take a ``now`` clock like
+    QueryEngine.now — pinned renders are deterministic and
+    date-independent (no raw time.time() reads)."""
+    _, primary, agg = _build()
+    s1 = principal_summary(agg, "user:1", now=1.7e9)
+    s2 = principal_summary(agg, "user:1", now=1.7e9)
+    assert s1 == s2
+    # a clock a year later ages the access-age lines
+    aged = principal_summary(agg, "user:1", now=1.7e9 + 365 * 86400)
+    assert aged != s1 and "access age" in aged
+    # callable clocks are read at render time
+    t = {"now": 1.7e9}
+    live = principal_summary(agg, "user:1", now=lambda: t["now"])
+    assert live == s1
+    d1 = render_dashboard(primary, agg, now=1.7e9)
+    assert d1 == render_dashboard(primary, agg, now=1.7e9)
+
+
+def test_scheduled_report_clock():
+    """generated_at follows the engine clock by default and the
+    explicit ``now`` override when given."""
+    _, primary, agg = _build()
+    q = QueryEngine(primary, agg, now=1.7e9)
+    assert scheduled_report(q)["generated_at"] == 1.7e9
+    rep = scheduled_report(q, now=2.0e9)
+    assert rep["generated_at"] == 2.0e9
+    # the window queries still evaluate against q.now (pinned): the
+    # report is reproducible run-to-run
+    rep2 = scheduled_report(q, now=2.0e9)
+    assert rep == rep2
