@@ -1,0 +1,296 @@
+"""Concurrent query-service benchmark (ISSUE 6; DESIGN.md §12).
+
+Claim under test: at >= 1M records, the serving tier — MVCC snapshot
+readers + the watermark-keyed result cache — sustains >= 2x the
+aggregate read throughput of the serialized read-then-ingest baseline
+while ingest churns the index underneath, with p99 query latency and
+the cache hit rate reported honestly (the hit rate is WHY it wins;
+pretending otherwise would be gaming the gate).
+
+Both legs run for the same fixed duration against the same corpus
+while the same churn schedule lands at the same wall-clock rate, and
+throughput is the number of queries each completes:
+
+- **serialized baseline**: one thread alternates churn batches and
+  direct ``QueryEngine`` reads on the live index — the pre-service
+  posture, where every query rescans current state and readers block
+  behind writers;
+- **concurrent service**: ``N_READERS`` threads issue the same query
+  mix through ``QueryService.query`` (each call reads a pinned
+  snapshot, hits or fills the cache) while a writer thread applies the
+  same churn batches on the same wall-clock schedule. Churn goes
+  through ``upsert_batch`` directly — the out-of-band path — so the
+  bench also exercises the epoch-probe invalidation (no ingestor hook
+  involved).
+
+Churn is paced by time, not by query count, because the ingest rate is
+a property of the deployment: events arrive at R/s whether or not
+queries run. Fixed-duration legs mean the concurrent side must SUSTAIN
+its rate across many invalidation cycles (one miss round per landed
+batch, coalesced by single-flight) rather than sprint through a quota
+between two batches; each CSV row reports how many batches landed.
+
+Smoke mode shrinks the corpus for CI bitrot protection; the 2x gate
+applies at full size. At smoke size the measured ratio is far larger
+(scans are cheap, so cached hits dominate both numerator and margin),
+so smoke only gates a loose floor — small-corpus ratios are not the
+paper-scale claim.
+"""
+from __future__ import annotations
+
+import sys
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.index import AggregateIndex
+from repro.core.metadata import files_only, synth_filesystem
+from repro.core.query import QueryEngine
+from repro.core.query_service import QueryService
+from repro.core.sharded_index import ShardedPrimaryIndex
+
+SMOKE = "--smoke" in sys.argv[1:]
+CORPUS = 60_000 if SMOKE else 1_000_000
+N_DIRS = max(200, CORPUS // 100)
+NOW = 1.7e9
+N_READERS = 4
+#: each leg runs this long; queries completed within it are the score
+DURATION_S = 1.0 if SMOKE else 3.0
+#: churn is paced by WALL CLOCK, identically in both legs: the ingest
+#: rate is a property of the deployment (events arrive at R/s whether
+#: or not queries run), so each leg absorbs however many batches land
+#: during its own run — faster service, fewer interruptions per query,
+#: which is precisely the claim being measured
+CHURN_PERIOD_S = 0.2
+CHURN_MAX_BATCHES = 30
+CHURN_SIZE = 4096
+#: the paper-scale 2x claim is gated at full size; smoke gates only a
+#: loose floor against bitrot (small-corpus ratios swing wildly with
+#: runner scheduling, in either direction)
+NEED = 1.1 if SMOKE else 2.0
+
+#: the query mix: Table-I staples spanning point probes, selective
+#: planner routes, and full scans, each in VARIANTS parameterizations
+#: (different globs, thresholds, probe paths) so the working set is
+#: ~VARIANTS * len(MIX) distinct cache keys per watermark — a dashboard
+#: with many panels, not one query hammered in a loop
+VARIANTS = 4
+SERVICE_MIX = [
+    ("glob_f", "find_by_glob", lambda p, v: (f"*/f{31 + v}??",)),
+    ("stat_point", "stat", lambda p, v: (p[v % len(p)],)),
+    ("name_f", "find_by_name", lambda p, v: (rf"/f{11 + v}\d\d$",)),
+    ("cold", "not_accessed_since",
+     lambda p, v: ((180 + 60 * v) * 86400,)),
+    ("large_low_access", "large_cold_files",
+     lambda p, v: (100e9 / (v + 1), (120 + 30 * v) * 86400)),
+    ("world_writable", "world_writable", lambda p, v: ()),
+    ("past_retention", "past_retention",
+     lambda p, v: ((v + 1) * 365 * 86400,)),
+    ("deleted_users", "owned_by_deleted_users",
+     lambda p, v: (list(range(20 + 2 * v)),)),
+]
+
+#: the same mix as direct QueryEngine calls for the serialized leg
+MIX = [(label, name,
+        (lambda name, argf: lambda q, p, v: getattr(q, name)(*argf(p, v)))
+        (name, argf))
+       for label, name, argf in SERVICE_MIX]
+
+
+def build_index(files):
+    idx = ShardedPrimaryIndex(4)
+    t0 = time.perf_counter()
+    idx.ingest_table(files, 1)
+    idx.attach_discovery()
+    print(f"# index built: {len(idx)} records "
+          f"({time.perf_counter() - t0:.1f}s)")
+    return idx
+
+
+def make_churn(files, n_batches):
+    """Identical churn schedule for both legs: versioned upsert_batch
+    rewrites of random record subsets."""
+    rng = np.random.default_rng(7)
+    out = []
+    for i in range(n_batches):
+        pick = rng.choice(len(files.paths), size=CHURN_SIZE, replace=False)
+        out.append((list(files.paths[pick]),
+                    {"path_hash": files.path_hash[pick],
+                     "size": files.size[pick].astype(np.float32) + i,
+                     "atime": files.atime[pick].astype(np.float32)},
+                    np.full(CHURN_SIZE, 2 + i, np.int64)))
+    return out
+
+
+def bench_serialized(files, probe_paths) -> Dict:
+    """One thread, read-then-ingest: every query rescans live state."""
+    idx = build_index(files)
+    q = QueryEngine(idx, AggregateIndex(), now=NOW)
+    churn = make_churn(files, CHURN_MAX_BATCHES)
+    for _, _, fn in MIX:
+        fn(q, probe_paths, 0)                  # warm jit/regex paths
+    lat = []
+    i = k = 0
+    n_keys = len(MIX) * VARIANTS
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < DURATION_S:
+        while (k < len(churn)
+               and time.perf_counter() - t0 >= k * CHURN_PERIOD_S):
+            paths, fields, vers = churn[k]
+            idx.upsert_batch(paths, fields, vers)
+            k += 1
+        m = i % n_keys
+        _, _, fn = MIX[m % len(MIX)]
+        i += 1
+        tq = time.perf_counter()
+        fn(q, probe_paths, m // len(MIX))
+        lat.append(time.perf_counter() - tq)
+    wall = time.perf_counter() - t0
+    return {"leg": "serialized", "queries": i, "wall_s": round(wall, 2),
+            "qps": round(i / wall, 1),
+            "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 2),
+            "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 2),
+            "cache_hit_rate": 0.0, "churn_applied": k}
+
+
+def bench_concurrent(files, probe_paths) -> Dict:
+    """N_READERS threads through QueryService + one out-of-band writer
+    on the same wall-clock churn schedule as the baseline."""
+    idx = build_index(files)
+    svc = QueryService(idx, AggregateIndex(), now=NOW,
+                       max_readers=N_READERS)
+    q = QueryEngine(idx, AggregateIndex(), now=NOW)
+    for _, _, fn in MIX:
+        fn(q, probe_paths, 0)                  # same warmup as baseline
+    churn = make_churn(files, CHURN_MAX_BATCHES)
+    served = [0] * N_READERS
+    applied = [0]
+    lat: List[List[float]] = [[] for _ in range(N_READERS)]
+    errors: List[str] = []
+    done = threading.Event()
+
+    def reader(rid, t0):
+        try:
+            i = rid                 # stagger so readers overlap on keys
+            n_keys = len(SERVICE_MIX) * VARIANTS
+            while time.perf_counter() - t0 < DURATION_S:
+                m = i % n_keys
+                _, name, argf = SERVICE_MIX[m % len(SERVICE_MIX)]
+                i += 1
+                tq = time.perf_counter()
+                svc.query(name, *argf(probe_paths, m // len(SERVICE_MIX)))
+                lat[rid].append(time.perf_counter() - tq)
+                served[rid] += 1
+        except BaseException as e:             # pragma: no cover
+            errors.append(repr(e))
+
+    def writer(t0):
+        # same schedule as the baseline: batch k lands once the leg is
+        # k * CHURN_PERIOD_S old; stop when the readers are done
+        k = 0
+        while k < len(churn) and not done.is_set():
+            if time.perf_counter() - t0 >= k * CHURN_PERIOD_S:
+                paths, fields, vers = churn[k]
+                idx.upsert_batch(paths, fields, vers)
+                k += 1
+                applied[0] = k
+            else:
+                time.sleep(0.005)
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=writer, args=(t0,))] + [
+        threading.Thread(target=reader, args=(i, t0))
+        for i in range(N_READERS)]
+    for t in threads:
+        t.start()
+    for t in threads[1:]:
+        t.join(timeout=600)
+    wall = time.perf_counter() - t0
+    done.set()
+    threads[0].join(timeout=600)
+    assert not errors, errors
+    flat = [x for per in lat for x in per]
+    # one unmeasured probe after the dust settles so freshness reflects
+    # every batch that landed (the epoch probe fires on acquire)
+    svc.query("world_writable")
+    fr = svc.freshness()
+    svc.close()
+    assert idx.snapshot_stats() == {"open_snapshots": 0,
+                                    "pinned_epochs": 0}, "pins leaked"
+    return {"leg": "concurrent", "queries": sum(served),
+            "wall_s": round(wall, 2),
+            "qps": round(sum(served) / wall, 1),
+            "p50_ms": round(float(np.percentile(flat, 50)) * 1e3, 2),
+            "p99_ms": round(float(np.percentile(flat, 99)) * 1e3, 2),
+            "cache_hit_rate": round(fr["cache"]["hit_rate"], 3),
+            "churn_applied": applied[0],
+            "open_snapshots": fr["open_snapshots"],
+            "data_version": fr["served_watermark"]}
+
+
+def validate(base: Dict, conc: Dict) -> List[str]:
+    fails = []
+    for r in (base, conc):
+        if r["queries"] < 2 * len(MIX):
+            fails.append(f"{r['leg']} leg served only {r['queries']} "
+                         "queries — not enough to mean anything")
+    speed = conc["qps"] / base["qps"] if base["qps"] else 0.0
+    if speed < NEED:
+        fails.append(f"concurrent aggregate throughput should be >= "
+                     f"{NEED}x serialized (got {speed:.2f}x: "
+                     f"{conc['qps']} vs {base['qps']} qps)")
+    if not (0.0 < conc["cache_hit_rate"] < 1.0):
+        fails.append("cache hit rate should be in (0, 1) under churn "
+                     f"(got {conc['cache_hit_rate']}: all-hit means the "
+                     "churn never invalidated; all-miss means the cache "
+                     "never served)")
+    if conc["open_snapshots"] != 0:
+        fails.append(f"{conc['open_snapshots']} snapshots leaked")
+    min_churn = 1 if SMOKE else 5
+    for r in (base, conc):
+        if r["churn_applied"] < min_churn:
+            fails.append(f"{r['leg']} leg absorbed {r['churn_applied']} "
+                         f"churn batches (< {min_churn}): the rate was "
+                         "not sustained under real invalidation")
+    if conc["data_version"] <= 0:
+        fails.append("out-of-band churn never advanced the data version")
+    return fails
+
+
+def main() -> List[str]:
+    t0 = time.perf_counter()
+    table = synth_filesystem(CORPUS, n_dirs=N_DIRS, seed=0)
+    files = files_only(table)
+    probe_paths = [str(files.paths[(j + 1) * len(files.paths) // 6])
+                   for j in range(VARIANTS)]
+    print(f"# corpus: {len(files)} files ({time.perf_counter() - t0:.1f}s), "
+          f"{N_READERS} readers, {DURATION_S}s per leg, "
+          f"{len(MIX) * VARIANTS} distinct queries, churn "
+          f"{CHURN_SIZE} rows per {CHURN_PERIOD_S}s of wall clock")
+    base = bench_serialized(files, probe_paths)
+    conc = bench_concurrent(files, probe_paths)
+    cols = ["leg", "queries", "wall_s", "qps", "p50_ms", "p99_ms",
+            "cache_hit_rate", "churn_applied"]
+    print(",".join(cols))
+    for r in (base, conc):
+        print(",".join(str(r[c]) for c in cols))
+    speed = conc["qps"] / base["qps"] if base["qps"] else 0.0
+    print(f"# aggregate speedup {speed:.2f}x | concurrent p99 "
+          f"{conc['p99_ms']}ms | cache hit rate {conc['cache_hit_rate']} "
+          f"| data version advanced to {conc['data_version']} over "
+          f"{conc['churn_applied']} batches")
+    fails = validate(base, conc)
+    for f in fails:
+        print("VALIDATION-FAIL:", f)
+    if not fails:
+        print(f"QUERY-SERVICE-VALIDATED: {N_READERS} concurrent readers "
+              f"sustain {speed:.2f}x (>= {NEED}x) the serialized "
+              f"read-then-ingest baseline at {CORPUS} records under "
+              "continuous churn, every read from a pinned snapshot")
+    return fails
+
+
+if __name__ == "__main__":
+    sys.exit(1 if main() else 0)

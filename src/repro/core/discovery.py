@@ -121,6 +121,60 @@ def eval_pred(vals: np.ndarray, op: str, arg) -> np.ndarray:
     raise ValueError(f"unknown predicate op {op!r}")
 
 
+def combine_candidates(per_key_candidates, delta: np.ndarray) -> np.ndarray:
+    """Shared candidate combinator: intersect the per-key candidate
+    lists (each an iterable of run-candidate arrays for one predicate/
+    trigram; every key must hold), then union the ``delta`` slots —
+    whose run projections may be stale, so they are candidates
+    unconditionally. Returns sorted unique slot ids. Shared by the live
+    ``ShardDiscovery`` and pinned ``SnapshotDiscovery`` query paths."""
+    inter: Optional[np.ndarray] = None
+    for arrays in per_key_candidates:
+        c = (np.unique(np.concatenate(arrays)) if arrays
+             else np.zeros(0, np.int64))
+        inter = c if inter is None else np.intersect1d(
+            inter, c, assume_unique=True)
+        if not len(inter):
+            break
+    if inter is None:
+        inter = np.zeros(0, np.int64)
+    return np.union1d(inter, delta) if len(delta) else inter
+
+
+def verify_select(alive: np.ndarray, columns: Dict[str, np.ndarray],
+                  paths: np.ndarray, cand: np.ndarray,
+                  preds: Sequence[Tuple[str, str, object]]) -> np.ndarray:
+    """Exact-verify tail of a predicate query: candidates re-checked
+    against the given arenas (alive mask + exact predicate), returned
+    in slot order (== ``live()`` row order). The arenas are EXPLICIT
+    arguments so the same verify runs against the live primary and
+    against a snapshot's pinned arrays (core/mvcc.py)."""
+    if not len(cand):
+        return paths[:0].copy()
+    # fancy indexing materializes fresh arrays — no defensive copies
+    keep = alive[cand]
+    for col, op, arg in preds:
+        arr = columns.get(col)
+        vals = (arr[cand] if arr is not None
+                else np.zeros(len(cand), INDEXED_COLUMNS[col]))
+        keep &= eval_pred(vals, op, arg)
+    return paths[cand[keep]]
+
+
+def verify_names(alive: np.ndarray, paths: np.ndarray, cand: np.ndarray,
+                 match) -> np.ndarray:
+    """Exact-verify tail of a name query: live candidates run through
+    ``match`` (the compiled regex / fnmatch verifier), in slot order.
+    Arena arguments are explicit for the same reason as
+    ``verify_select``."""
+    if not len(cand):
+        return paths[:0].copy()
+    cand = cand[alive[cand]]
+    got = paths[cand]
+    keep = [i for i, p in enumerate(got) if match(p)]
+    return got[keep]
+
+
 class ColumnRun:
     """One immutable sorted projection over a fixed slot subset: per
     indexed column, the covered slots' values sorted ascending with the
@@ -468,23 +522,8 @@ class ShardDiscovery:
     # -- query surface (candidate prefilter -> exact verify) -----------------
 
     def _intersect_with_delta(self, per_key_candidates) -> np.ndarray:
-        """Shared candidate combinator: intersect the per-key candidate
-        lists (each an iterable of run-candidate arrays for one
-        predicate/trigram; every key must hold), then union the delta
-        slots — whose run projections may be stale, so they are
-        candidates unconditionally. Returns sorted unique slot ids."""
-        inter: Optional[np.ndarray] = None
-        for arrays in per_key_candidates:
-            c = (np.unique(np.concatenate(arrays)) if arrays
-                 else np.zeros(0, np.int64))
-            inter = c if inter is None else np.intersect1d(
-                inter, c, assume_unique=True)
-            if not len(inter):
-                break
-        if inter is None:
-            inter = np.zeros(0, np.int64)
-        delta = self.delta_slots()
-        return np.union1d(inter, delta) if len(delta) else inter
+        """``combine_candidates`` against the live delta buffer."""
+        return combine_candidates(per_key_candidates, self.delta_slots())
 
     def candidates(self, preds: Sequence[Tuple[str, str, object]]
                    ) -> np.ndarray:
@@ -501,16 +540,8 @@ class ShardDiscovery:
         (== ``live()`` row order)."""
         cand = self.candidates(preds)
         self.stats["last_candidates"] = len(cand)
-        if not len(cand):
-            return self.primary.paths[:0].copy()
-        # fancy indexing materializes fresh arrays — no defensive copies
-        keep = self.primary.alive[cand]
-        for col, op, arg in preds:
-            arr = self.primary.columns.get(col)
-            vals = (arr[cand] if arr is not None
-                    else np.zeros(len(cand), INDEXED_COLUMNS[col]))
-            keep &= eval_pred(vals, op, arg)
-        return self.primary.paths[cand[keep]]
+        return verify_select(self.primary.alive, self.primary.columns,
+                             self.primary.paths, cand, preds)
 
     def name_candidates(self, codes: Sequence[int]) -> np.ndarray:
         """Sorted unique slot ids whose path MAY contain every trigram:
@@ -525,13 +556,58 @@ class ShardDiscovery:
         through the trigram postings; byte-identical to the scan."""
         cand = self.name_candidates(codes)
         self.stats["last_candidates"] = len(cand)
-        if not len(cand):
-            return self.primary.paths[:0].copy()
-        alive = self.primary.alive[cand]
-        cand = cand[alive]
-        paths = self.primary.paths[cand]
-        keep = [i for i, p in enumerate(paths) if match(p)]
-        return paths[keep]
+        return verify_names(self.primary.alive, self.primary.paths,
+                            cand, match)
+
+
+class SnapshotDiscovery:
+    """Read-only discovery view pinned by an MVCC snapshot
+    (core/mvcc.py; DESIGN.md §12). Captures — under the index write
+    lock — the freshness verdict, the runs/postings lists, and the
+    delta slots of a live ``ShardDiscovery``, then answers queries by
+    verifying candidates against the SNAPSHOT's frozen arenas instead
+    of the live primary.
+
+    Exactness carries over from the live contract: if the source was
+    fresh at pin time, the pinned runs + delta covered every slot live
+    at pin time, and runs/``tri_runs`` are lists of IMMUTABLE objects —
+    later merges/rebuilds replace or extend the live lists, never the
+    pinned copies. If the source was stale, ``fresh`` is False and the
+    planner falls back to scanning the pinned arenas — same fallback
+    rule as the live path, evaluated at pin time once."""
+
+    def __init__(self, view, d: ShardDiscovery):
+        self._view = view                      # mvcc.IndexSnapshot
+        self.fresh = bool(d.fresh)
+        self.runs = list(d.runs)
+        self.tri_runs = list(d.tri_runs)
+        self._delta = d.delta_slots()
+        self.stats: Dict[str, int] = {}
+
+    def candidates(self, preds: Sequence[Tuple[str, str, object]]
+                   ) -> np.ndarray:
+        return combine_candidates(
+            ([r.candidates(col, op, arg) for r in self.runs]
+             for col, op, arg in preds), self._delta)
+
+    def select(self, preds: Sequence[Tuple[str, str, object]]
+               ) -> np.ndarray:
+        cand = self.candidates(preds)
+        self.stats["last_candidates"] = len(cand)
+        v = self._view
+        return verify_select(v.alive, v.columns, v.paths,
+                             cand[cand < v.n], preds)
+
+    def name_candidates(self, codes: Sequence[int]) -> np.ndarray:
+        return combine_candidates(
+            ([r.lookup(code) for r in self.tri_runs] for code in codes),
+            self._delta)
+
+    def name_select(self, codes: Sequence[int], match) -> np.ndarray:
+        cand = self.name_candidates(codes)
+        self.stats["last_candidates"] = len(cand)
+        v = self._view
+        return verify_names(v.alive, v.paths, cand[cand < v.n], match)
 
 
 # ---------------------------------------------------------------------------

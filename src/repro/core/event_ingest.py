@@ -64,6 +64,7 @@ and deletes reach the aggregate quantiles at the next snapshot rebuild
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import time
@@ -202,6 +203,13 @@ class EventIngestor:
         #: consumer lag, core/stream_pipeline.py) — surfaced in
         #: freshness() as ``log_lag`` next to the watermark
         self.lag_source: Optional[Callable[[], int]] = None
+        #: watermark-advance listeners, called as cb(applied_seq,
+        #: mutated) at the END of each apply, still under the primary's
+        #: write lock. ``mutated`` is False for no-op applies (e.g. an
+        #: all-OPEN batch coalescing to nothing): the watermark moved
+        #: but the readable state did not — the serving tier's result
+        #: cache keys off exactly this distinction (query_service.py)
+        self.on_apply: List[Callable[[int, bool], None]] = []
         self.metrics = {"events_in": 0, "applied": 0, "upserts": 0,
                         "tombstones": 0, "cancelled": 0, "repathed": 0,
                         "applies": 0, "sketch_rows": 0, "unresolved": 0,
@@ -309,35 +317,39 @@ class EventIngestor:
         tombstones costs no re-hash.
         """
         self.flush()
-        n_up = len(up_paths)
-        up_paths = list(up_paths)
-        del_paths = list(del_paths)
-        new_mask = self.primary.upsert_batch(
-            up_paths, up_fields, np.full(n_up, version, np.int64))
-        del_mask = self.primary.delete_batch(
-            del_paths, np.full(len(del_paths), version, np.int64),
-            hashes=del_hashes)
-        up_uid = np.asarray(up_fields["uid"]) if n_up else \
-            np.zeros(0, np.int32)
-        up_gid = np.asarray(up_fields["gid"]) if n_up else \
-            np.zeros(0, np.int32)
-        if self.cfg.update_aggregates:
-            count_jobs = [(up_paths, up_uid, up_gid, +1.0, new_mask),
-                          (del_paths, np.asarray(del_uid, np.int32),
-                           np.asarray(del_gid, np.int32), -1.0, del_mask)]
-            up_size = (np.asarray(up_fields["size"], np.float32) if n_up
-                       else np.zeros(0, np.float32))
-            up_mtime = (np.asarray(up_fields["mtime"], np.float32) if n_up
-                        else np.zeros(0, np.float32))
-            self._apply_aggregates(count_jobs, up_paths, up_uid, up_gid,
-                                   up_size, up_mtime, new_mask)
-        self.metrics["reconciles"] += 1
-        self.metrics["repair_upserts"] += n_up
-        self.metrics["repair_tombstones"] += int(del_mask.sum())
-        self._advance_watermark(version)
-        self.watermark.reconciled_at = self.clock()
-        return {"upserts": n_up, "tombstones": int(del_mask.sum()),
-                "entered": int(new_mask.sum())}
+        with self._write_lock():
+            n_up = len(up_paths)
+            up_paths = list(up_paths)
+            del_paths = list(del_paths)
+            new_mask = self.primary.upsert_batch(
+                up_paths, up_fields, np.full(n_up, version, np.int64))
+            del_mask = self.primary.delete_batch(
+                del_paths, np.full(len(del_paths), version, np.int64),
+                hashes=del_hashes)
+            up_uid = np.asarray(up_fields["uid"]) if n_up else \
+                np.zeros(0, np.int32)
+            up_gid = np.asarray(up_fields["gid"]) if n_up else \
+                np.zeros(0, np.int32)
+            if self.cfg.update_aggregates:
+                count_jobs = [(up_paths, up_uid, up_gid, +1.0, new_mask),
+                              (del_paths, np.asarray(del_uid, np.int32),
+                               np.asarray(del_gid, np.int32), -1.0,
+                               del_mask)]
+                up_size = (np.asarray(up_fields["size"], np.float32)
+                           if n_up else np.zeros(0, np.float32))
+                up_mtime = (np.asarray(up_fields["mtime"], np.float32)
+                            if n_up else np.zeros(0, np.float32))
+                self._apply_aggregates(count_jobs, up_paths, up_uid,
+                                       up_gid, up_size, up_mtime,
+                                       new_mask)
+            self.metrics["reconciles"] += 1
+            self.metrics["repair_upserts"] += n_up
+            self.metrics["repair_tombstones"] += int(del_mask.sum())
+            self._advance_watermark(version)
+            self.watermark.reconciled_at = self.clock()
+            self._notify_applied(int(version), mutated=True)
+            return {"upserts": n_up, "tombstones": int(del_mask.sum()),
+                    "entered": int(new_mask.sum())}
 
     def principals_of(self, paths: Sequence[str], uid: np.ndarray,
                       gid: np.ndarray) -> set:
@@ -466,7 +478,12 @@ class EventIngestor:
         """Restore ``state_dict`` output in place. The ingestor must be
         constructed with the same (cfg, pcfg) shape universe; the
         primary/aggregate indexes are restored separately (they carry
-        their own state)."""
+        their own state). Held under the primary write lock so a
+        concurrent snapshot never pins a half-restored ingestor."""
+        with self._write_lock():
+            self._load_state_inner(state)
+
+    def _load_state_inner(self, state: Dict) -> None:
         wm = state["watermark"]
         self.watermark = Watermark(
             applied_seq=int(wm["applied_seq"]),
@@ -495,17 +512,40 @@ class EventIngestor:
         # readers see summaries immediately after a restore
         if self.cfg.update_aggregates:
             self.republish(range(self.pcfg.n_principals))
+        # a restore rewinds/replaces readable state wholesale: cached
+        # results keyed at any prior watermark are void
+        self._notify_applied(int(self.watermark.applied_seq), mutated=True)
 
     # -- the apply pipeline ---------------------------------------------------
 
+    def _write_lock(self):
+        """The primary's MVCC write lock (DESIGN.md §12), or a no-op
+        context on duck-typed primaries predating ``write_lock``. Held
+        across one WHOLE apply, so a concurrent ``snapshot()`` pins
+        batch boundaries only — never a half-applied event batch."""
+        wl = getattr(self.primary, "write_lock", None)
+        return wl() if wl is not None else contextlib.nullcontext()
+
+    def _notify_applied(self, seq: int, mutated: bool) -> None:
+        for cb in self.on_apply:
+            cb(seq, mutated)
+
     def _apply(self, batches: List[Dict[str, np.ndarray]]) -> int:
+        with self._write_lock():
+            return self._apply_inner(batches)
+
+    def _apply_inner(self, batches: List[Dict[str, np.ndarray]]) -> int:
         b = {k: np.concatenate([np.asarray(bb[k]) for bb in batches])
              for k in batches[0]}
         n_in = len(b["fid"])
 
         facts = self._coalesce(b)
         if facts is None:
-            self._advance_watermark(int(b["seq"].max()))
+            # nothing survived coalescing (e.g. all-OPEN with filtering
+            # on): the watermark advances, the readable state does not
+            seq = int(b["seq"].max())
+            self._advance_watermark(seq)
+            self._notify_applied(seq, mutated=False)
             return n_in
 
         # a fid the state manager knows as a directory stays one even when
@@ -688,7 +728,9 @@ class EventIngestor:
         self.metrics["tombstones"] += int(del_mask.sum())
         self.metrics["cancelled"] += int(facts["cancelled"].sum())
         self.metrics["applies"] += 1
-        self._advance_watermark(int(b["seq"].max()))
+        seq = int(b["seq"].max())
+        self._advance_watermark(seq)
+        self._notify_applied(seq, mutated=True)
         return n_in
 
     def _advance_watermark(self, seq: int) -> None:

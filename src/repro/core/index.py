@@ -12,12 +12,16 @@ Consistency semantics (DESIGN.md §6): every mutation carries a version on
 one monotone logical clock shared by snapshot ingest and event ingest (a
 snapshot's version is the changelog sequence number at scan time). A
 record with a higher version never regresses to a lower one, so replaying
-any suffix of the change history is idempotent. Readers see the index
-*between* ingest calls only — each batch mutation is applied column-wise,
-so a reader interleaving with an ingest thread could observe a
-half-applied batch; the repo's drivers are synchronous, and the freshness
-contract queries actually rely on is the watermark exported by
-event_ingest.EventIngestor.
+any suffix of the change history is idempotent. Readers on the LIVE
+index see it *between* ingest calls only — each batch mutation is
+applied column-wise, so a reader interleaving with an ingest thread
+could observe a half-applied batch. Concurrent readers therefore go
+through MVCC snapshot views instead (DESIGN.md §12): ``snapshot()``
+pins a read-only view under the index write lock, mutating paths
+copy-on-first-write any arena an open snapshot still references, and
+closing the view releases its pin (core/mvcc.py; served by
+core/query_service.py). The freshness contract queries rely on is the
+watermark exported by event_ingest.EventIngestor.
 """
 from __future__ import annotations
 
@@ -25,6 +29,7 @@ import contextlib
 import dataclasses
 import functools
 import os
+import threading
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -182,6 +187,19 @@ class DictSlotMap:
                            np.int64, n)
 
 
+def _locked(fn):
+    """Serialize a mutating index op against ``snapshot()`` pinning:
+    both run under the index's reentrant write lock, so a snapshot never
+    pins mid-write arenas. The lock is reentrant, so composite writers
+    (the event ingestor's apply, which wraps several mutations in
+    ``write_lock()``) pay one acquisition; reads stay lock-free."""
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self._lock:
+            return fn(self, *args, **kwargs)
+    return wrapper
+
+
 @dataclasses.dataclass
 class PrimaryIndex:
     """Columnar per-object index. Ingest is idempotent by (subject,
@@ -213,6 +231,18 @@ class PrimaryIndex:
     #: ``_mutated`` — structural rewrites invalidate instead
     discovery: Optional[object] = dataclasses.field(
         default=None, repr=False, compare=False)
+    #: MVCC machinery (DESIGN.md §12) — none of it serialized.
+    #: Reentrant write lock: every mutator below runs under it
+    #: (``_locked``), and ``snapshot()`` pins under it too.
+    _lock: threading.RLock = dataclasses.field(
+        default_factory=threading.RLock, repr=False, compare=False)
+    #: arena names pinned by at least one open snapshot; the next
+    #: in-place write to one copies it first (copy-on-first-write)
+    _shared: set = dataclasses.field(
+        default_factory=set, repr=False, compare=False)
+    #: open-snapshot refcounts keyed by the mutation epoch they pinned
+    _snap_refs: Dict[int, int] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     def _mutated(self, slots: Optional[np.ndarray] = None) -> None:
         """Epoch bump + delta publication to the attached discovery
@@ -231,6 +261,7 @@ class PrimaryIndex:
             d.note_slots(slots)
         d.mark_synced(self.mutation_epoch)
 
+    @_locked
     def attach_discovery(self, cfg=None):
         """Create + attach a discovery.ShardDiscovery over this index
         and build it from the current live rows (fresh immediately).
@@ -240,11 +271,83 @@ class PrimaryIndex:
         self.discovery.rebuild()
         return self.discovery
 
+    @_locked
     def rebuild_discovery(self) -> None:
         """Rebuild the attached discovery index from live rows (no-op
         when none attached) — the post-snapshot / post-restore hook."""
         if self.discovery is not None:
             self.discovery.rebuild()
+
+    # -- MVCC snapshot views (DESIGN.md §12) ----------------------------------
+
+    def write_lock(self):
+        """The reentrant lock serializing mutations against snapshot
+        pinning. Composite writers (the event ingestor's apply loop)
+        hold it across a whole logical batch so a concurrent
+        ``snapshot()`` pins batch boundaries only; the per-mutator
+        acquisitions nest inside it for free."""
+        return self._lock
+
+    def snapshot(self, freshness: Optional[Dict] = None):
+        """Pin a read-only MVCC view of the current state. O(#arenas) —
+        the view holds REFERENCES to the live arrays: every arena is
+        marked shared here, and the next in-place write to one copies it
+        first (``_unshare``), so the view keeps answering from the
+        frozen originals while ingest proceeds. ``freshness`` rides
+        along uninterpreted (the serving tier pins the ingest watermark
+        here, core/query_service.py). Close the view — it is a context
+        manager — to release its pin; ``snapshot_stats`` audits pins."""
+        from repro.core.mvcc import IndexSnapshot
+        with self._lock:
+            self._shared = {"paths", "version", "alive", *self.columns}
+            view = IndexSnapshot(self, freshness=freshness)
+            e = view.mutation_epoch
+            self._snap_refs[e] = self._snap_refs.get(e, 0) + 1
+            return view
+
+    def _release_snapshot(self, epoch: int) -> None:
+        """Refcount decrement for a closing snapshot (close idempotence
+        is the view's job). When the last pin at ``epoch`` drops, the
+        epoch's entry is reclaimed; when NO pins remain at all, the
+        arenas stop being shared and later mutations write in place
+        again without a defensive copy."""
+        with self._lock:
+            left = self._snap_refs.get(epoch, 0) - 1
+            if left > 0:
+                self._snap_refs[epoch] = left
+            else:
+                self._snap_refs.pop(epoch, None)
+            if not self._snap_refs:
+                self._shared.clear()
+
+    def snapshot_stats(self) -> Dict[str, int]:
+        """Pin accounting (the leak check's probe): currently-open
+        snapshot views and the distinct mutation epochs they pinned."""
+        with self._lock:
+            return {"open_snapshots": int(sum(self._snap_refs.values())),
+                    "pinned_epochs": len(self._snap_refs)}
+
+    def _unshare(self, *names: str) -> None:
+        """Copy-on-first-write: any arena pinned by an open snapshot is
+        replaced with a private copy before an in-place write, so pinned
+        views keep reading the frozen original. Wholesale rebinds
+        (capacity growth, ``compact``, ``load_state``) allocate fresh
+        arrays for everything and clear the shared set instead."""
+        shared = self._shared
+        if not shared:
+            return
+        for k in names:
+            if k not in shared:
+                continue
+            shared.discard(k)
+            if k == "paths":
+                self.paths = self.paths.copy()
+            elif k == "version":
+                self.version = self.version.copy()
+            elif k == "alive":
+                self.alive = self.alive.copy()
+            elif k in self.columns:
+                self.columns[k] = self.columns[k].copy()
 
     @property
     def _slot(self):
@@ -263,6 +366,7 @@ class PrimaryIndex:
         cols = {k: getattr(files, k) for k in self.STANDARD_COLUMNS}
         return self.ingest_columns(files.paths, cols, version)
 
+    @_locked
     def ingest_columns(self, paths: np.ndarray,
                        cols: Dict[str, np.ndarray], version: int,
                        rows: Optional[np.ndarray] = None,
@@ -293,7 +397,9 @@ class PrimaryIndex:
         for k, v in cols.items():
             if k not in self.columns:
                 self.columns[k] = np.zeros(len(self.paths), dtype_of(k, v))
+        self._unshare("version", "alive", *cols)
         if n_new:
+            self._unshare("paths")
             self.paths[slots[new_mask]] = paths[new_mask]
             if self.tombstone_floor:
                 # fresh slots may be reclaimed tombstones: they start at
@@ -348,12 +454,17 @@ class PrimaryIndex:
         for k, v in self.columns.items():
             self.columns[k] = np.concatenate(
                 [v, np.zeros(cap - cur, v.dtype)])
+        # growth rebound every arena to a fresh array: open snapshots
+        # keep their pinned originals, nothing is shared any more
+        self._shared.clear()
 
+    @_locked
     def _put(self, path: str, fields: Dict, version: int) -> int:
         if not self.columns:
             self.columns = {k: np.zeros(0, np.asarray(v).dtype)
                             for k, v in fields.items()}
         slot, is_new = self.slot_map.get_or_add(path)
+        self._unshare("paths", "version", "alive", *fields)
         new = 0
         if is_new:
             self._ensure_capacity(max(0, len(self.slot_map)
@@ -376,6 +487,7 @@ class PrimaryIndex:
         (stale event). Prefer ``upsert_batch`` on the hot path."""
         self._put(path, fields, version)
 
+    @_locked
     def delete(self, path: str, version: int) -> None:
         """Single-record tombstone: the slot stays allocated (columns keep
         their last values) but the record leaves every live() view. A
@@ -383,12 +495,14 @@ class PrimaryIndex:
         slot."""
         slot = self._slot.get(path)
         if slot is not None and version >= self.version[slot]:
+            self._unshare("alive", "version")
             self.alive[slot] = False
             self.version[slot] = version
             self._mutated(np.array([slot], np.int64))
 
     # -- batched event-path mutations (paper §IV-B3; DESIGN.md §6) ------------
 
+    @_locked
     def upsert_batch(self, paths: Sequence[str], fields: Dict[str, np.ndarray],
                      versions: np.ndarray,
                      hashes: Optional[np.ndarray] = None) -> np.ndarray:
@@ -428,6 +542,7 @@ class PrimaryIndex:
             hashes = np.asarray(fields["path_hash"], np.uint32)
         slots, new_mask = self.slot_map.assign(paths, hashes)
         self._ensure_capacity(max(0, len(self.slot_map) - len(self.paths)))
+        self._unshare("paths", "version", "alive", *fields)
         if new_mask.any():
             self.paths[slots[new_mask]] = np.asarray(
                 paths, object)[new_mask]
@@ -454,6 +569,7 @@ class PrimaryIndex:
         self._mutated(slots)
         return out
 
+    @_locked
     def delete_batch(self, paths: Sequence[str],
                      versions: np.ndarray,
                      hashes: Optional[np.ndarray] = None) -> np.ndarray:
@@ -472,12 +588,14 @@ class PrimaryIndex:
         ok = known & (versions >= self.version[s])
         was_alive = self.alive[s] & ok
         sel = s[ok]
+        self._unshare("alive", "version")
         self.alive[sel] = False
         self.version[sel] = versions[ok]
         if known.any():
             self._mutated(s[known])
         return was_alive
 
+    @_locked
     def invalidate_older(self, version: int) -> int:
         """Records from snapshots older than `version` are dead — this is
         how periodic re-ingest detects deletions. The tombstones carry
@@ -486,6 +604,7 @@ class PrimaryIndex:
         resurrect them."""
         n = len(self.slot_map)
         stale = self.alive[:n] & (self.version[:n] < version)
+        self._unshare("alive", "version")
         self.alive[:n] &= ~stale
         self.version[:n][stale] = version
         # a snapshot speaks for the WHOLE namespace (and ingest_columns
@@ -506,6 +625,7 @@ class PrimaryIndex:
         return {"slots": n, "live": live, "dead": n - live,
                 "dead_fraction": (n - live) / n if n else 0.0}
 
+    @_locked
     def compact(self, slot_map_factory=None) -> int:
         """Rewrite the arenas to live-only rows and rebuild the slot map
         (DESIGN.md §9.2). Tombstoned slots are never reclaimed by normal
@@ -550,6 +670,10 @@ class PrimaryIndex:
                                      self.columns.get("path_hash"))
         assert new_mask.all() and len(new_map) == len(self.paths)
         self.slot_map = new_map
+        # every arena was rebound to a fresh array above; open snapshots
+        # keep their pinned pre-compaction arrays (and their pinned slot
+        # map object — compaction builds a NEW map, never mutates the old)
+        self._shared.clear()
         # slot ids just changed under every discovery run: invalidate
         # and rebuild from the (now live-only) rows so the planner keeps
         # accelerating across compactions (DESIGN.md §11.3)
@@ -577,6 +701,7 @@ class PrimaryIndex:
             "tombstone_floor": int(self.tombstone_floor),
         }
 
+    @_locked
     def load_state(self, state: Dict, slot_map_factory=None) -> None:
         """Rebuild this index in place from ``state_dict`` output. The
         slot map is reassigned from the stored path order (identity
@@ -598,6 +723,9 @@ class PrimaryIndex:
         self.version = unpack_array(state["version"])
         self.alive = unpack_array(state["alive"])
         self.tombstone_floor = int(state["tombstone_floor"])
+        # all arenas rebound wholesale: nothing is shared with open
+        # snapshots any more (they keep the pre-restore arrays)
+        self._shared.clear()
         # discovery state is derived, not serialized: invalidate here;
         # the restore path rebuilds deterministically (DESIGN.md §11.4)
         self._mutated(None)

@@ -45,18 +45,26 @@ class MonitorConfig:
 
 class Monitor:
     def __init__(self, cfg: MonitorConfig, sink: Optional[Callable] = None,
-                 ingestor=None):
+                 ingestor=None, query_service=None):
         """``ingestor``: optional event_ingest.EventIngestor (duck-typed —
         anything with ``ingest(batch, names=...)``). When attached, every
         micro-batch this monitor processes is also fed to the dual index,
         so monitoring and index synchronization share one consumer — the
         paper's real-time path (§IV-B3). Visibility follows the
         ingestor's consistency mode (eager: before process() returns;
-        buffered: at its watermark flush)."""
+        buffered: at its watermark flush).
+
+        ``query_service``: optional query_service.QueryService serving
+        this monitor's index. When attached, ``run()`` also exports the
+        serving tier's freshness — the served watermark, how far the
+        oldest open snapshot trails it, and cache effectiveness — so
+        operators see not just how fresh the INDEX is but how fresh the
+        answers being SERVED are (DESIGN.md §12.4)."""
         self.cfg = cfg
         self.state = hi.init_hierarchy(cfg.max_fids)
         self.sink = sink or (lambda updates, deletes: None)
         self.ingestor = ingestor
+        self.query_service = query_service
         self.metrics = {"events_in": 0, "updates": 0, "deletes": 0,
                         "cancelled": 0, "batches": 0, "stat_calls": 0}
         self._step = jax.jit(self._make_step(), donate_argnums=(0,))
@@ -165,6 +173,15 @@ class Monitor:
             # planner's accelerated queries are exact (or no discovery
             # index attached); nonzero = scans until a rebuild
             out["index_lag"] = fr.get("index_lag", 0)
+        if self.query_service is not None:
+            sf = self.query_service.freshness()
+            out["served_watermark"] = sf["served_watermark"]
+            out["open_snapshots"] = sf["open_snapshots"]
+            # versions between the oldest pinned snapshot still being
+            # read and the current data version: bounded staleness of
+            # answers in flight, 0 when nothing is pinned behind
+            out["snapshot_lag"] = sf["snapshot_lag"]
+            out["cache_hit_rate"] = sf["cache"]["hit_rate"]
         return out
 
 

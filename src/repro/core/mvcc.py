@@ -1,0 +1,230 @@
+"""MVCC snapshot views over the primary index (DESIGN.md §12).
+
+``PrimaryIndex.snapshot()`` / ``ShardedPrimaryIndex.snapshot()`` pin one
+of these under the index write lock. A view is cheap — O(#arenas)
+references, no copies: the index marks every arena *shared* at pin time
+and its mutators copy-on-first-write any shared arena before touching it
+(``PrimaryIndex._unshare``), so the view keeps answering from the frozen
+originals while ingest proceeds. Wholesale arena rebinds (capacity
+growth, compaction, restore) publish fresh arrays and leave the pinned
+ones untouched, so a view survives every mutation class — including
+compaction renumbering slots and checkpoints restoring older state.
+
+Views are refcounted by the mutation epoch they pinned
+(``PrimaryIndex._snap_refs``): ``close()`` — idempotent; views are
+context managers — drops the view's array references and decrements the
+pin, and once no pin remains the index stops COW-copying entirely.
+``snapshot_stats()`` audits open pins (the leak check's probe).
+
+Read surface: the PrimaryIndex view methods (``live`` / ``live_paths`` /
+``lookup`` / ``get_record`` / ``__len__``) with identical semantics and
+row order, evaluated against the pinned arenas — so a ``QueryEngine``
+runs against a view unmodified, planner included (``self.discovery`` is
+a ``discovery.SnapshotDiscovery`` pinned alongside, and the sharded view
+exposes ``.shards`` for ``discovery.discovery_shards``). Point probes
+(``lookup`` / ``get_record``) touch the live slot map — append-only for
+a given map object, but probed under the index lock because the sharded
+``HashSlotMap`` folds its overlay during probes — then filter out slots
+assigned after the pin; everything else is lock-free reads of frozen
+arrays.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core import metadata as md
+from repro.core.index import PrimaryIndex
+
+
+class IndexSnapshot:
+    """Read-only view of one ``PrimaryIndex`` pinned at a mutation
+    epoch. Constructed by ``PrimaryIndex.snapshot()`` UNDER the index
+    write lock — never directly."""
+
+    def __init__(self, index: PrimaryIndex, freshness: Optional[Dict] = None):
+        self._index = index
+        self.n = len(index.slot_map)           # slots assigned at pin
+        self.columns: Dict[str, np.ndarray] = dict(index.columns)
+        self.paths = index.paths
+        self.version = index.version
+        self.alive = index.alive
+        self._slot_map = index.slot_map
+        self.tombstone_floor = index.tombstone_floor
+        self.mutation_epoch = index.mutation_epoch
+        #: uninterpreted freshness mark pinned by the serving tier (the
+        #: ingest watermark the pinned state reflects)
+        self.freshness_mark = freshness
+        d = index.discovery
+        if d is not None:
+            from repro.core.discovery import SnapshotDiscovery
+            self.discovery = SnapshotDiscovery(self, d)
+        else:
+            self.discovery = None
+        self._closed = False
+
+    # -- lifecycle -----------------------------------------------------------
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self) -> None:
+        """Release this view's pin (idempotent). Drops every array
+        reference so the frozen arenas become collectable as soon as no
+        other view pins them — closing snapshots is what returns COW
+        memory."""
+        if self._closed:
+            return
+        self._closed = True
+        self.columns = {}
+        self.paths = None
+        self.version = None
+        self.alive = None
+        self._slot_map = None
+        self.discovery = None
+        self._index._release_snapshot(self.mutation_epoch)
+
+    def __enter__(self) -> "IndexSnapshot":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- read surface (PrimaryIndex view semantics, pinned arenas) -----------
+
+    def _probe(self, path: str) -> Optional[int]:
+        """Slot of ``path`` as of the pin: the live slot map is
+        append-only per map object (compaction swaps in a NEW map; the
+        pinned reference stays valid), so a probe under the index lock
+        plus the ``slot < n`` filter yields exactly the pin-time
+        assignment. The lock matters for the sharded ``HashSlotMap``,
+        whose probes fold a write overlay."""
+        with self._index.write_lock():
+            slot = self._slot_map.get(path)
+        if slot is None or slot >= self.n:
+            return None
+        return slot
+
+    def lookup(self, path: str) -> Optional[Dict[str, float]]:
+        slot = self._probe(path)
+        if slot is None or not self.alive[slot]:
+            return None
+        out = {k: v[slot].item() for k, v in self.columns.items()}
+        out["path"] = path
+        out["version"] = int(self.version[slot])
+        return out
+
+    def get_record(self, path: str, keys: Sequence[str] = (
+            "uid", "gid", "size", "mtime")) -> Optional[Dict[str, float]]:
+        slot = self._probe(path)
+        if slot is None:
+            return None
+        return {k: self.columns[k][slot].item()
+                for k in keys if k in self.columns}
+
+    def live(self, copy: bool = True) -> Dict[str, np.ndarray]:
+        """``PrimaryIndex.live`` against the pinned arenas (the arrays
+        are frozen, so ``copy=False`` views are safe for the lifetime
+        of the snapshot, not just until the next mutation)."""
+        n = self.n
+        mask = self.alive[:n]
+        if mask.all():
+            out = {k: v[:n].copy() if copy else v[:n]
+                   for k, v in self.columns.items()}
+            out["path"] = self.paths[:n].copy() if copy else self.paths[:n]
+            m = n
+        else:
+            out = {k: v[:n][mask] for k, v in self.columns.items()}
+            out["path"] = self.paths[:n][mask]
+            m = int(mask.sum())
+        for k, dt in PrimaryIndex.STANDARD_COLUMNS.items():
+            if k not in out:
+                out[k] = np.zeros(m, dt)
+        return out
+
+    def live_paths(self, copy: bool = True) -> np.ndarray:
+        n = self.n
+        mask = self.alive[:n]
+        if mask.all():
+            return self.paths[:n].copy() if copy else self.paths[:n]
+        return self.paths[:n][mask]
+
+    def __len__(self) -> int:
+        return int(self.alive[:self.n].sum())
+
+
+class ShardedIndexSnapshot:
+    """Read-only view of a ``ShardedPrimaryIndex``: one pinned
+    ``IndexSnapshot`` per shard (all pinned under the sharded index's
+    top-level write lock, so they are mutually consistent), merged with
+    the sharded index's own scatter-gather semantics — shard-major row
+    order, hash-routed point probes. ``shards`` is the per-shard view
+    list ``discovery.discovery_shards`` duck-types."""
+
+    def __init__(self, index, shards, freshness: Optional[Dict] = None):
+        self._index = index
+        self.shards = list(shards)
+        self.n_shards = len(self.shards)
+        self.freshness_mark = freshness
+        #: the layout-wide epoch is the per-shard sum, mirroring the
+        #: serving tier's data-version probe (query_service.py)
+        self.mutation_epoch = sum(s.mutation_epoch for s in self.shards)
+        self._closed = False
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for s in self.shards:
+            s.close()
+        self.shards = []
+
+    def __enter__(self) -> "ShardedIndexSnapshot":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- read surface (ShardedPrimaryIndex view semantics) -------------------
+
+    def shard_of(self, path: str) -> int:
+        return md.path_hash(path) % self.n_shards
+
+    def lookup(self, path: str) -> Optional[Dict[str, float]]:
+        return self.shards[self.shard_of(path)].lookup(path)
+
+    def get_record(self, path: str, keys: Sequence[str] = (
+            "uid", "gid", "size", "mtime")) -> Optional[Dict[str, float]]:
+        return self.shards[self.shard_of(path)].get_record(path, keys)
+
+    def live(self) -> Dict[str, np.ndarray]:
+        """Scatter-gather merge, byte-identical to
+        ``ShardedPrimaryIndex.live()`` over the same state: shard-major
+        row order, columns only some shards carry zero-filled
+        elsewhere. Per-shard views are copy-free — pinned arenas are
+        frozen, and the concatenate materializes anyway."""
+        views = [s.live(copy=False) for s in self.shards]
+        counts = [len(v["path"]) for v in views]
+        keys = {}
+        for v in views:
+            for k, col in v.items():
+                keys.setdefault(k, col.dtype)
+        out = {}
+        for k, dt in keys.items():
+            out[k] = np.concatenate(
+                [v[k] if k in v else np.zeros(c, dt)
+                 for v, c in zip(views, counts)])
+        return out
+
+    def live_paths(self) -> np.ndarray:
+        return np.concatenate([s.live_paths(copy=False)
+                               for s in self.shards])
+
+    def __len__(self) -> int:
+        return sum(len(s) for s in self.shards)

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import fnmatch
 import re
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -92,6 +93,10 @@ class QueryEngine:
         self.aggregate = aggregate
         self._now = time.time if now is None else now
         self.ingestor = ingestor
+        # per-thread plan records: concurrent readers sharing one
+        # engine (the serving tier admits N at once) must not observe
+        # each other's routing decisions
+        self._plan_tls = threading.local()
 
     @property
     def now(self) -> float:
@@ -152,9 +157,18 @@ class QueryEngine:
     # pins this property across corpora, delta fill, staleness, and
     # shard counts). ``last_plan`` records the routing decision.
 
-    #: routing record of the most recent plannable query:
-    #: {"query", "route": "discovery"|"scan", "reason", "candidates"}
-    last_plan: Optional[Dict] = None
+    @property
+    def last_plan(self) -> Optional[Dict]:
+        """Routing record of THIS THREAD's most recent plannable query:
+        {"query", "route": "discovery"|"scan", "reason", "candidates"}.
+        Thread-local — it used to be a shared attribute, so two
+        interleaved planner queries read each other's plans
+        (tests/test_query_service.py pins the regression)."""
+        return getattr(self._plan_tls, "plan", None)
+
+    @last_plan.setter
+    def last_plan(self, value: Optional[Dict]) -> None:
+        self._plan_tls.plan = value
 
     def _discovery_route(self):
         """(shard discovery list, reason) — list is None on fallback."""

@@ -34,12 +34,13 @@ throughput at 1/4/16 shards against the monolith.
 """
 from __future__ import annotations
 
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import metadata as md
-from repro.core.index import PrimaryIndex
+from repro.core.index import PrimaryIndex, _locked
 
 # modular inverse of the FNV prime mod 2^32: lets the vectorized hash
 # process fixed-width zero-padded rows unmasked (a trailing zero byte
@@ -259,6 +260,10 @@ class ShardedPrimaryIndex:
         self.shards: List[PrimaryIndex] = [
             PrimaryIndex(slot_map=slot_map_factory())
             for _ in range(n_shards)]
+        # top-level MVCC write lock (DESIGN.md §12): cross-shard
+        # mutations and snapshot pinning serialize here, then take the
+        # per-shard locks inside — one consistent order, no deadlock
+        self._lock = threading.RLock()
 
     # -- routing --------------------------------------------------------------
 
@@ -309,8 +314,37 @@ class ShardedPrimaryIndex:
         bounds = np.searchsorted(sids[order], np.arange(self.n_shards + 1))
         return order, bounds
 
+    # -- MVCC snapshot views (DESIGN.md §12) ----------------------------------
+
+    def write_lock(self):
+        """The top-level reentrant lock serializing cross-shard
+        mutations against snapshot pinning (see ``PrimaryIndex.
+        write_lock``; composite writers hold it across a whole apply)."""
+        return self._lock
+
+    def snapshot(self, freshness: Optional[Dict] = None):
+        """Pin a read-only MVCC view: one per-shard pin taken under the
+        top-level lock, so the shard views are mutually consistent
+        (every cross-shard mutation runs under the same lock). Returns
+        a ``mvcc.ShardedIndexSnapshot`` — close it to release."""
+        from repro.core.mvcc import ShardedIndexSnapshot
+        with self._lock:
+            return ShardedIndexSnapshot(
+                self, [sh.snapshot() for sh in self.shards],
+                freshness=freshness)
+
+    def snapshot_stats(self) -> Dict[str, int]:
+        """Per-shard pin accounting summed: a sharded view holds one
+        pin per shard, so ``open_snapshots`` counts views x shards
+        (0 still means "no pins anywhere" for the leak check)."""
+        with self._lock:
+            per = [sh.snapshot_stats() for sh in self.shards]
+        return {"open_snapshots": sum(p["open_snapshots"] for p in per),
+                "pinned_epochs": sum(p["pinned_epochs"] for p in per)}
+
     # -- mutations (monolith protocol) ----------------------------------------
 
+    @_locked
     def ingest_table(self, table: md.MetadataTable, version: int) -> int:
         """Snapshot ingest: split the (preprocessed) table per shard on
         its own ``path_hash`` column, then bulk-ingest each slice. The
@@ -339,6 +373,7 @@ class ShardedPrimaryIndex:
                     hashes=ph[rows])
         return n_new
 
+    @_locked
     def ingest_tables(self, tables: Sequence[md.MetadataTable],
                       version: int) -> int:
         """Ingest pre-partitioned sub-tables (``snapshot.
@@ -355,12 +390,15 @@ class ShardedPrimaryIndex:
                 shard.invalidate_older(version)
         return n_new
 
+    @_locked
     def upsert(self, path: str, fields: Dict, version: int) -> None:
         self.shards[self.shard_of(path)].upsert(path, fields, version)
 
+    @_locked
     def delete(self, path: str, version: int) -> None:
         self.shards[self.shard_of(path)].delete(path, version)
 
+    @_locked
     def upsert_batch(self, paths: Sequence[str],
                      fields: Dict[str, np.ndarray],
                      versions: np.ndarray,
@@ -395,6 +433,7 @@ class ShardedPrimaryIndex:
                 vers_o[lo:hi], hashes=h_o[lo:hi])
         return out
 
+    @_locked
     def delete_batch(self, paths: Sequence[str], versions: np.ndarray,
                      hashes: Optional[np.ndarray] = None) -> np.ndarray:
         n = len(paths)
@@ -417,11 +456,13 @@ class ShardedPrimaryIndex:
                 paths_o[lo:hi], vers_o[lo:hi], hashes=h_o[lo:hi])
         return out
 
+    @_locked
     def invalidate_older(self, version: int) -> int:
         return sum(sh.invalidate_older(version) for sh in self.shards)
 
     # -- discovery (secondary indexes; DESIGN.md §11) -------------------------
 
+    @_locked
     def attach_discovery(self, cfg=None) -> List:
         """Attach one discovery.ShardDiscovery per shard (built fresh
         from each shard's live rows). The planner (core/query.py)
@@ -429,6 +470,7 @@ class ShardedPrimaryIndex:
         discovery index is attached and fresh."""
         return [sh.attach_discovery(cfg) for sh in self.shards]
 
+    @_locked
     def rebuild_discovery(self) -> None:
         """Rebuild every attached per-shard discovery index from live
         rows — the post-snapshot-ingest / post-restore hook."""
@@ -444,6 +486,7 @@ class ShardedPrimaryIndex:
         return {"slots": n, "live": live, "dead": n - live,
                 "dead_fraction": (n - live) / n if n else 0.0}
 
+    @_locked
     def compact(self, threshold: float = 0.0) -> int:
         """Compact every shard whose dead-slot fraction exceeds
         ``threshold`` (DESIGN.md §9.2) — compaction is naturally
@@ -470,6 +513,7 @@ class ShardedPrimaryIndex:
             "shards": [sh.state_dict() for sh in self.shards],
         }
 
+    @_locked
     def load_state(self, state: Dict, slot_map_factory=None) -> None:
         assert state["kind"] == "sharded", state.get("kind")
         if state["n_shards"] != self.n_shards:

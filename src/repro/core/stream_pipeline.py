@@ -384,13 +384,18 @@ class DurablePipeline:
         if bar["topic"] != self.topic_name:
             raise ValueError(f"checkpoint is for topic {bar['topic']!r}, "
                              f"this pipeline consumes {self.topic_name!r}")
-        self.ingestor.primary.load_state(obj["index"])
-        self.ingestor.load_state(obj["ingestor"])
-        # discovery state is DERIVED (checkpoints never carry it):
-        # rebuild deterministically from the restored arenas, so the
-        # planner accelerates again right after restore and the suffix
-        # replay below maintains it incrementally (DESIGN.md §11.4)
-        rebuild_discovery(self.ingestor.primary)
+        # one write-lock span (reentrant) over index + ingestor +
+        # discovery restore: a concurrent reader snapshots either the
+        # pre-restore state or the complete post-restore state, never a
+        # restored index paired with a pre-restore watermark
+        with self.ingestor._write_lock():
+            self.ingestor.primary.load_state(obj["index"])
+            self.ingestor.load_state(obj["ingestor"])
+            # discovery state is DERIVED (checkpoints never carry it):
+            # rebuild deterministically from the restored arenas, so the
+            # planner accelerates again right after restore and the
+            # suffix replay below maintains it incrementally (§11.4)
+            rebuild_discovery(self.ingestor.primary)
         # producer-side routing table: rebound from the restored name
         # bindings so post-recovery produces keep per-subject partition
         # affinity instead of falling back to '#fid' keys
