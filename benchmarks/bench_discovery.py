@@ -86,7 +86,10 @@ def bench_layout(files, layout_name, layout) -> List[Dict]:
     t0 = time.perf_counter()
     idx.attach_discovery()
     build_s = time.perf_counter() - t0
-    q = QueryEngine(idx, AggregateIndex(), now=NOW)
+    # kernels pinned off: this bench isolates discovery-vs-scan —
+    # with them on, a detached/stale index would route to the fused
+    # kernel (bench_predeval measures that leg) instead of the scan
+    q = QueryEngine(idx, AggregateIndex(), now=NOW, use_kernels=False)
     print(f"# {layout_name}: ingest {ingest_s:.1f}s, discovery build "
           f"{build_s:.1f}s over {len(idx)} records")
 
@@ -136,7 +139,10 @@ def bench_cycle(files, layout_name, layout) -> Dict:
     idx = layout()
     idx.ingest_table(files, 1)
     idx.attach_discovery(DiscoveryConfig(merge_threshold=4096))
-    q = QueryEngine(idx, AggregateIndex(), now=NOW)
+    # kernels pinned off: this bench isolates discovery-vs-scan —
+    # with them on, a detached/stale index would route to the fused
+    # kernel (bench_predeval measures that leg) instead of the scan
+    q = QueryEngine(idx, AggregateIndex(), now=NOW, use_kernels=False)
     probe = QUERIES[2][1]                         # not_accessed_12m
     fresh = probe(q)
     stages = {"fresh": q.last_plan["route"]}

@@ -1,0 +1,276 @@
+"""Fused predicate-kernel benchmark (ISSUE 7; DESIGN.md §13).
+
+Claims under test at >= 1M records:
+
+1. **Single query**: each Table-I predicate query through the fused
+   kernel route (one pass over the column arena emitting a packed
+   match bitmap, then exact-verify on the candidates) is at least as
+   fast as the numpy per-shard scan — with byte-identical output every
+   rep.
+2. **Batched dashboard mix**: a 32-query mix through
+   ``QueryEngine.select_many`` (all programs stacked into ONE fused
+   pass per shard) beats the same 32 queries as sequential kernel
+   launches — the arena read amortizes across the whole batch.
+
+Alongside (reported, not gated): achieved arena bandwidth of the fused
+pass vs a measured host memcpy peak — how much of the memory roofline
+the single-pass formulation captures.
+
+Both legs share one engine pair built over the same corpus: the kernel
+engine has no discovery index attached (so the cascade lands on the
+kernel route every time) and the scan engine pins ``use_kernels=False``.
+Timings are medians over reps, legs back-to-back per rep
+(bench_discovery methodology). Smoke mode shrinks the corpus for CI;
+the gates apply at full size, reduced floors in smoke (a 60k-row arena
+leaves the fixed dispatch overhead unamortized).
+"""
+from __future__ import annotations
+
+import gc
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.index import AggregateIndex, PrimaryIndex
+from repro.core.metadata import files_only, synth_filesystem
+from repro.core.query import QueryEngine
+from repro.core.sharded_index import ShardedPrimaryIndex
+
+SMOKE = "--smoke" in sys.argv[1:]
+CORPUS = 60_000 if SMOKE else 1_000_000
+N_DIRS = max(200, CORPUS // 100)
+REPS = 3 if SMOKE else 5
+NOW = 1.7e9
+#: gates are stated at 1M records; smoke floors are reduced (fixed
+#: per-launch dispatch overhead dominates a 60k-row arena — on
+#: sharded4 each shard is only 15k rows, so the 4 dispatches cost more
+#: than the scan they replace; at full size the arena pass amortizes)
+NEED_SINGLE = 0.25 if SMOKE else 1.0
+NEED_BATCH = 0.8 if SMOKE else 1.0
+
+LAYOUTS = (("mono", lambda: PrimaryIndex()),
+           ("sharded4", lambda: ShardedPrimaryIndex(4)))
+
+#: the Table-I predicate suite — every entry expressible as one fused
+#: program (bench_discovery covers the name/glob family the kernel
+#: does not take)
+QUERIES: List[Tuple[str, str, tuple]] = [
+    ("not_accessed_12m", "not_accessed_since", (365 * 86400,)),
+    ("large_low_access", "large_cold_files", (100e9, 180 * 86400)),
+    ("past_retention_2y", "past_retention", (2 * 365 * 86400,)),
+    ("world_writable", "world_writable", ()),
+    ("deleted_users", "owned_by_deleted_users", (list(range(28)),)),
+]
+
+#: the 32-panel dashboard mix: the 5 predicate families swept over
+#: 7 threshold variants each (+ 4 baseline panels) — what a monitoring
+#: UI refresh actually issues (DESIGN.md §13.4)
+VARIANTS = 7
+
+
+def dashboard_mix() -> List[Tuple[str, tuple, dict]]:
+    mix = []
+    for v in range(VARIANTS):
+        months = (3 + 2 * v) * 30 * 86400
+        mix += [
+            ("not_accessed_since", (months,), {}),
+            ("large_cold_files", (10.0 ** (6 + v / 2), months), {}),
+            ("past_retention", (2 * months,), {}),
+            ("owned_by_deleted_users", (list(range(4 + 4 * v)),), {}),
+        ]
+    mix += [("world_writable", (), {})] * 4
+    assert len(mix) == 32
+    return mix
+
+
+def timed(fn):
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        out = fn()
+        dt = time.perf_counter() - t0
+    finally:
+        gc.enable()
+    return dt, out
+
+
+def build_engines(files, layout):
+    idx_k, idx_s = layout(), layout()
+    idx_k.ingest_table(files, 1)
+    idx_s.ingest_table(files, 1)
+    qk = QueryEngine(idx_k, AggregateIndex(), now=NOW, use_kernels=True)
+    qs = QueryEngine(idx_s, AggregateIndex(), now=NOW, use_kernels=False)
+    return qk, qs
+
+
+def bench_single(files, layout_name, layout) -> List[Dict]:
+    qk, qs = build_engines(files, layout)
+    rows = []
+    for name, meth, args in QUERIES:
+        getattr(qk, meth)(*args)                  # warm jit + arenas
+        getattr(qs, meth)(*args)
+        kern_t, scan_t = [], []
+        equal = True
+        for _ in range(REPS):
+            tk, rk = timed(lambda: getattr(qk, meth)(*args))
+            assert qk.last_plan["route"] == "kernel", (name, qk.last_plan)
+            cand = qk.last_plan["candidates"]
+            ts, rs = timed(lambda: getattr(qs, meth)(*args))
+            assert qs.last_plan["route"] == "scan", (name, qs.last_plan)
+            kern_t.append(tk)
+            scan_t.append(ts)
+            equal &= (rk.dtype == rs.dtype and np.array_equal(rk, rs))
+        rows.append({
+            "layout": layout_name, "query": name,
+            "matches": len(rk), "candidates": cand,
+            "scan_ms": round(float(np.median(scan_t)) * 1e3, 2),
+            "kernel_ms": round(float(np.median(kern_t)) * 1e3, 2),
+            "speedup_x": round(float(np.median(scan_t))
+                               / float(np.median(kern_t)), 2),
+            "identical": equal,
+        })
+    return rows
+
+
+def bench_batched(files, layout_name, layout) -> Dict:
+    """The 32-query dashboard mix: ONE stacked fused pass per shard
+    (``select_many``) vs the same mix as 32 sequential kernel
+    launches on the same engine."""
+    qk, _ = build_engines(files, layout)
+    mix = dashboard_mix()
+    qk.select_many(mix)                           # warm the stacked jit
+    for name, args, kw in mix[:5]:
+        getattr(qk, name)(*args, **kw)            # warm per-query jits
+    batch_t, seq_t = [], []
+    equal = True
+    for _ in range(REPS):
+        tb, rb = timed(lambda: qk.select_many(mix))
+        launches = qk.last_plan.get("batched")
+        tq, rq = timed(lambda: [getattr(qk, n)(*a, **k) for n, a, k in mix])
+        batch_t.append(tb)
+        seq_t.append(tq)
+        equal &= all(b.dtype == s.dtype and np.array_equal(b, s)
+                     for b, s in zip(rb, rq))
+    return {"layout": layout_name, "queries": len(mix),
+            "batched_in_pass": launches,
+            "sequential_ms": round(float(np.median(seq_t)) * 1e3, 2),
+            "batched_ms": round(float(np.median(batch_t)) * 1e3, 2),
+            "speedup_x": round(float(np.median(seq_t))
+                               / float(np.median(batch_t)), 2),
+            "identical": equal}
+
+
+def bandwidth_report(n: int = 0) -> Dict:
+    """Achieved arena bandwidth of one fused pass vs measured host
+    memcpy peak (report-only; also surfaced by bench_roofline). The
+    fused pass reads the whole arena once regardless of K, so bytes =
+    arena.nbytes per launch."""
+    from repro.kernels.predeval import ops as pk_ops
+    from repro.kernels.predeval import ref as pk_ref
+
+    n = n or CORPUS
+    rng = np.random.default_rng(0)
+    cols = {
+        "size": rng.lognormal(9, 2.5, n).astype(np.float32),
+        "atime": (NOW - rng.uniform(0, 4e7, n)).astype(np.float32),
+        "mtime": (NOW - rng.uniform(0, 8e7, n)).astype(np.float32),
+        "uid": rng.integers(0, 64, n).astype(np.int32),
+        "gid": rng.integers(0, 8, n).astype(np.int32),
+        "mode": rng.choice([0o644, 0o600, 0o777, 0o666], n).astype(np.int32),
+    }
+    alive = np.ones(n, np.int32)
+    arena = pk_ops.pack_arena(cols, alive, n)
+    progs = pk_ref.stack_programs([pk_ref.compile_program(p) for p in (
+        [("size", "gt", 1e6), ("atime", "lt", NOW - 1e7)],
+        [("mode", "mask", 0o002)],
+        [("uid", "notin", list(range(16)))],
+        [("mtime", "lt", NOW - 2e7)],
+    )])
+    pk_ops.predeval_words(arena, progs)           # warm
+    reps = []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        pk_ops.predeval_words(arena, progs)
+        reps.append(time.perf_counter() - t0)
+    pass_s = float(np.median(reps))
+    # host memcpy peak over the same byte volume (read + write counted
+    # once each; the fused pass only reads, so this is a generous peak)
+    buf = np.empty(arena.nbytes // 8, np.float64)
+    buf[:] = 1.0
+    dst = np.empty_like(buf)
+    reps = []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        np.copyto(dst, buf)
+        reps.append(time.perf_counter() - t0)
+    copy_s = float(np.median(reps))
+    return {"rows": n, "arena_mib": round(arena.nbytes / 2**20, 1),
+            "programs": progs.k,
+            "pass_ms": round(pass_s * 1e3, 2),
+            "achieved_gbs": round(arena.nbytes / pass_s / 1e9, 2),
+            "memcpy_gbs": round(arena.nbytes / copy_s / 1e9, 2),
+            "roofline_frac": round(copy_s / pass_s, 3)}
+
+
+def run():
+    t0 = time.perf_counter()
+    files = files_only(synth_filesystem(CORPUS, n_dirs=N_DIRS, seed=0))
+    print(f"# corpus: {len(files)} files ({time.perf_counter() - t0:.1f}s)")
+    single_rows, batch_rows = [], []
+    for nm, fn in LAYOUTS:
+        single_rows += bench_single(files, nm, fn)
+        batch_rows.append(bench_batched(files, nm, fn))
+    bw = bandwidth_report()
+    return single_rows, batch_rows, bw
+
+
+def validate(single_rows: List[Dict], batch_rows: List[Dict]) -> List[str]:
+    fails = []
+    for r in single_rows:
+        if not r["identical"]:
+            fails.append(f"[{r['layout']}/{r['query']}] kernel output "
+                         "differs from the scan path")
+        if r["speedup_x"] < NEED_SINGLE:
+            fails.append(
+                f"[{r['layout']}/{r['query']}] fused kernel should be >= "
+                f"{NEED_SINGLE}x the scan (got {r['speedup_x']}x)")
+    for b in batch_rows:
+        if not b["identical"]:
+            fails.append(f"[{b['layout']}] batched mix output differs "
+                         "from sequential launches")
+        if b["speedup_x"] < NEED_BATCH:
+            fails.append(
+                f"[{b['layout']}] batched mix should be >= {NEED_BATCH}x "
+                f"sequential launches (got {b['speedup_x']}x)")
+        if b["batched_in_pass"] != 32:
+            fails.append(f"[{b['layout']}] only {b['batched_in_pass']}/32 "
+                         "mix queries joined the stacked pass")
+    return fails
+
+
+def main() -> List[str]:
+    single_rows, batch_rows, bw = run()
+    cols = ["layout", "query", "matches", "candidates", "scan_ms",
+            "kernel_ms", "speedup_x", "identical"]
+    print(",".join(cols))
+    for r in single_rows:
+        print(",".join(str(r[c]) for c in cols))
+    cols2 = ["layout", "queries", "batched_in_pass", "sequential_ms",
+             "batched_ms", "speedup_x", "identical"]
+    print(",".join(cols2))
+    for b in batch_rows:
+        print(",".join(str(b[c]) for c in cols2))
+    print("bandwidth: " + ",".join(f"{k}={v}" for k, v in bw.items()))
+    fails = validate(single_rows, batch_rows)
+    for f in fails:
+        print("VALIDATION-FAIL:", f)
+    if not fails:
+        print("all predicate-kernel validations passed")
+    return fails
+
+
+if __name__ == "__main__":
+    sys.exit(1 if main() else 0)

@@ -11,7 +11,20 @@ RESULTS = [os.path.join(os.path.dirname(__file__), "..", "results", p)
            for p in ("dryrun.jsonl", "dryrun_icicle2.jsonl")]
 
 
+def predeval_leg() -> None:
+    """Measured (not modeled) leg: fused predicate-kernel arena
+    bandwidth vs host memcpy peak — report-only (DESIGN.md §13.6; the
+    gated comparison lives in bench_predeval)."""
+    try:
+        from benchmarks.bench_predeval import bandwidth_report
+        bw = bandwidth_report(250_000)
+        print("predeval: " + ",".join(f"{k}={v}" for k, v in bw.items()))
+    except Exception as e:                        # pragma: no cover
+        print(f"predeval: unavailable ({e})")
+
+
 def main() -> List[str]:
+    predeval_leg()
     recs = load_records(*RESULTS)
     # hillclimb iterations live in dryrun_hillclimb.jsonl (EXPERIMENTS §Perf)
     recs = [r for r in recs if r.get("tag", "") in ("", "icicle")]

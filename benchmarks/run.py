@@ -21,6 +21,7 @@ BENCHES = [
     ("reconcile", "benchmarks.bench_reconcile"),
     ("durable_pipeline", "benchmarks.bench_durable_pipeline"),
     ("discovery", "benchmarks.bench_discovery"),
+    ("predeval", "benchmarks.bench_predeval"),
     ("query_service", "benchmarks.bench_query_service"),
     ("fig3_5_scaling", "benchmarks.bench_scaling"),
     ("table1_queries", "benchmarks.bench_index_query"),

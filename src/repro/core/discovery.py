@@ -87,22 +87,29 @@ class DiscoveryConfig:
     chunk_windows: int = 4_000_000
 
 
-def _widen_lo(arg, dtype: np.dtype):
-    """Largest value of ``dtype`` guaranteed <= every x with x > arg:
-    run binary searches cast the operand to the column dtype, which can
-    round a float64 bound across stored float32 values — widen by one
-    ulp so the candidate slice over-includes and exact verify trims."""
-    if np.issubdtype(dtype, np.floating):
-        f = dtype.type(arg)
-        return np.nextafter(f, dtype.type(-np.inf))
-    return arg
+# bound widening (1-ulp outward, so candidate slices over-include and
+# exact verify trims) and the vectorized zone pruner are shared with
+# the fused predicate kernel — the kernel package is their canonical
+# home (pure numpy there; no jax at import time)
+from repro.kernels.predeval.ref import (widen_hi as _widen_hi,  # noqa: E402
+                                        widen_lo as _widen_lo,
+                                        zone_keep)
 
 
-def _widen_hi(arg, dtype: np.dtype):
-    if np.issubdtype(dtype, np.floating):
-        f = dtype.type(arg)
-        return np.nextafter(f, dtype.type(np.inf))
-    return arg
+def _pruned_run_candidates(runs: List["ColumnRun"],
+                           zone_lo: Dict[str, np.ndarray],
+                           zone_hi: Dict[str, np.ndarray],
+                           preds) -> "object":
+    """Per-predicate run-candidate lists with zone-map pruning batched
+    over ALL runs' (min, max) pairs at once (``zone_keep`` — one
+    vectorized compare) instead of the per-run host check inside
+    ``ColumnRun.candidates``. Yields one list per predicate, for
+    ``combine_candidates``."""
+    for col, op, arg in preds:
+        keep = zone_keep(zone_lo[col], zone_hi[col], op, arg,
+                         INDEXED_COLUMNS[col])
+        yield [r.candidates(col, op, arg, check_zone=False)
+               for r, k in zip(runs, keep) if k]
 
 
 def eval_pred(vals: np.ndarray, op: str, arg) -> np.ndarray:
@@ -200,20 +207,24 @@ class ColumnRun:
             self.zone[col] = ((v[0], v[-1]) if self.n
                               else (np.inf, -np.inf))
 
-    def candidates(self, col: str, op: str, arg) -> np.ndarray:
+    def candidates(self, col: str, op: str, arg,
+                   check_zone: bool = True) -> np.ndarray:
         """Slot ids of rows that MAY satisfy (col, op, arg) — a superset
         of the true matches among this run's covered slots, computed on
-        the frozen projection (the caller verifies exactly)."""
+        the frozen projection (the caller verifies exactly).
+        ``check_zone=False`` skips the scalar zone test — for callers
+        that already pruned this run through the batched ``zone_keep``
+        pass over every run's (min, max) at once."""
         vals, slots = self.vals[col], self.slots[col]
         lo, hi = self.zone[col]
         if op == "lt":
             bound = _widen_hi(arg, vals.dtype)
-            if lo > bound:                      # zone map: skip the run
+            if check_zone and lo > bound:       # zone map: skip the run
                 return slots[:0]
             return slots[:np.searchsorted(vals, bound, side="right")]
         if op == "gt":
             bound = _widen_lo(arg, vals.dtype)
-            if hi < bound:
+            if check_zone and hi < bound:
                 return slots[:0]
             return slots[np.searchsorted(vals, bound, side="left"):]
         # mask / notin: one packed-array sweep (no zone pruning — the
@@ -418,6 +429,19 @@ class ShardDiscovery:
         self._synced_epoch = -1
         self.stats = {"rebuilds": 0, "merges": 0, "noted": 0,
                       "invalidations": 0}
+        self._refresh_zones()
+
+    def _refresh_zones(self) -> None:
+        """Rebind the per-column (R,) zone-bound matrices — the batch
+        pruner's input — from the current runs list. Always REBIND
+        fresh arrays/dicts (never mutate): pinned ``SnapshotDiscovery``
+        views hold references to the previous generation."""
+        self._zone_lo = {
+            col: np.array([r.zone[col][0] for r in self.runs])
+            for col in INDEXED_COLUMNS}
+        self._zone_hi = {
+            col: np.array([r.zone[col][1] for r in self.runs])
+            for col in INDEXED_COLUMNS}
 
     # -- maintenance protocol (called by the primary's hooks) ----------------
 
@@ -440,6 +464,7 @@ class ShardDiscovery:
         self._delta = []
         self._delta_n = 0
         self.stats["invalidations"] += 1
+        self._refresh_zones()
 
     def note_slots(self, slot_ids: np.ndarray) -> None:
         """Record touched slots from one primary mutation (the delta
@@ -470,6 +495,7 @@ class ShardDiscovery:
         self.runs.append(ColumnRun(self.primary, slots))
         self.tri_runs.append(TrigramRun(self.primary.paths[slots], slots,
                                         self.cfg.chunk_windows))
+        self._refresh_zones()
         self.stats["merges"] += 1
         if len(self.runs) > self.cfg.max_runs:
             self.rebuild()                      # LSM major compaction
@@ -489,6 +515,7 @@ class ShardDiscovery:
         self._delta_n = 0
         self._stale = False
         self._synced_epoch = p.mutation_epoch
+        self._refresh_zones()
         self.stats["rebuilds"] += 1
 
     # -- freshness -----------------------------------------------------------
@@ -527,10 +554,11 @@ class ShardDiscovery:
 
     def candidates(self, preds: Sequence[Tuple[str, str, object]]
                    ) -> np.ndarray:
-        """Sorted unique slot ids that MAY satisfy every predicate."""
+        """Sorted unique slot ids that MAY satisfy every predicate;
+        runs are zone-pruned in one vectorized batch pass first."""
         return self._intersect_with_delta(
-            [r.candidates(col, op, arg) for r in self.runs]
-            for col, op, arg in preds)
+            _pruned_run_candidates(self.runs, self._zone_lo,
+                                   self._zone_hi, preds))
 
     def select(self, preds: Sequence[Tuple[str, str, object]]
                ) -> np.ndarray:
@@ -581,14 +609,19 @@ class SnapshotDiscovery:
         self.fresh = bool(d.fresh)
         self.runs = list(d.runs)
         self.tri_runs = list(d.tri_runs)
+        # zone matrices are rebound (never mutated) by the live side,
+        # so holding the current generation pins them consistently
+        # with the runs list captured above
+        self._zone_lo = d._zone_lo
+        self._zone_hi = d._zone_hi
         self._delta = d.delta_slots()
         self.stats: Dict[str, int] = {}
 
     def candidates(self, preds: Sequence[Tuple[str, str, object]]
                    ) -> np.ndarray:
         return combine_candidates(
-            ([r.candidates(col, op, arg) for r in self.runs]
-             for col, op, arg in preds), self._delta)
+            _pruned_run_candidates(self.runs, self._zone_lo,
+                                   self._zone_hi, preds), self._delta)
 
     def select(self, preds: Sequence[Tuple[str, str, object]]
                ) -> np.ndarray:

@@ -33,6 +33,97 @@ import numpy as np
 from repro.core import discovery as disc
 from repro.core.index import AggregateIndex, PrimaryIndex
 
+_PREDEVAL = None
+
+
+def _predeval():
+    """Lazy handle to the fused predicate-kernel package (DESIGN.md
+    §13): (ops module, ref module), or None when the package cannot
+    import at all. Note jax being absent does NOT disable it — the
+    package's numpy host oracle then evaluates the same programs; the
+    ``use_kernels`` auto mode just declines to route there (the scan
+    path is cheaper than oracle + verify on pure numpy)."""
+    global _PREDEVAL
+    if _PREDEVAL is None:
+        try:
+            from repro.kernels.predeval import ops as pk_ops
+            from repro.kernels.predeval import ref as pk_ref
+            _PREDEVAL = (pk_ops, pk_ref)
+        except Exception:
+            _PREDEVAL = False
+    return _PREDEVAL or None
+
+
+#: the queries the planner can express as predicate lists over the
+#: primary arenas — exactly the ones with a ``_plan_select`` route
+PREDICATE_QUERIES = frozenset({
+    "world_writable", "not_accessed_since", "large_cold_files",
+    "owned_by_deleted_users", "past_retention",
+})
+
+#: predicate queries whose cutoffs derive from the query clock: their
+#: answers change with wall time even at an unchanged watermark, so
+#: the serving tier folds the resolved clock into their cache keys
+TIME_RELATIVE = frozenset({
+    "not_accessed_since", "large_cold_files", "past_retention",
+})
+
+
+def _bind(args: Tuple, kw: Dict, *names: str) -> List:
+    """Bind one value per parameter name from (*args, **kw), no
+    defaults, no extras — TypeError mirrors what calling the query
+    method itself would raise."""
+    if len(args) > len(names) or set(kw) - set(names[len(args):]):
+        raise TypeError("bad query arguments")
+    vals = list(args)
+    for nm in names[len(args):]:
+        if nm not in kw:
+            raise TypeError(f"missing query argument {nm!r}")
+        vals.append(kw[nm])
+    return vals
+
+
+def pred_spec(name: str, args: Tuple, kw: Dict,
+              now: float) -> Optional[List[Tuple[str, str, object]]]:
+    """The predicate list a named Table-I query evaluates — the same
+    tuples its method hands ``_plan_select`` — with time-relative
+    cutoffs resolved against the CALLER's ``now``. None when ``name``
+    is not a predicate query or the arguments do not bind (the caller
+    then dispatches the method directly and lets it raise naturally).
+    Shared by ``select_many`` and the serving tier's time-pinned
+    execution + cache keying."""
+    if name not in PREDICATE_QUERIES:
+        return None
+    try:
+        if name == "world_writable":
+            _bind(args, kw)
+            return [("mode", "mask", 0o002)]
+        if name == "not_accessed_since":
+            (seconds,) = _bind(args, kw, "seconds")
+            return [("atime", "lt", now - float(seconds))]
+        if name == "large_cold_files":
+            min_size, idle = _bind(args, kw, "min_size", "idle_seconds")
+            return [("size", "gt", min_size),
+                    ("atime", "lt", now - float(idle))]
+        if name == "owned_by_deleted_users":
+            (uids,) = _bind(args, kw, "active_uids")
+            return [("uid", "notin", list(uids))]
+        if name == "past_retention":
+            (ret,) = _bind(args, kw, "retention_seconds")
+            return [("mtime", "lt", now - float(ret))]
+    except TypeError:
+        return None
+    return None
+
+
+def _shard_rows(sh) -> int:
+    """Rows a scan of this shard covers: ``snapshot.n`` on a pinned
+    view, ``len(slot_map)`` (assigned slots) on a live index."""
+    n = getattr(sh, "n", None)
+    if n is not None:
+        return int(n)
+    return len(sh.slot_map)
+
 
 def resolve_now(now) -> float:
     """One clock-resolution rule for every ``now`` knob (QueryEngine,
@@ -75,7 +166,8 @@ def merge_freshness(marks: Sequence[Dict[str, float]]
 
 class QueryEngine:
     def __init__(self, primary: PrimaryIndex, aggregate: AggregateIndex,
-                 now=None, ingestor=None):
+                 now=None, ingestor=None,
+                 use_kernels: Optional[bool] = None):
         """``ingestor``: optional event_ingest.EventIngestor (duck-typed —
         anything with ``freshness()``) whose watermark stamps results. A
         list/tuple of ingestors (e.g. one per MDT feeding a sharded
@@ -88,11 +180,27 @@ class QueryEngine:
         freeze its notion of "now" at construction, or cold-data windows
         silently drift stale. Pass a float to pin a deterministic clock
         (tests, replaying historical scans) or any callable to supply
-        your own."""
+        your own.
+
+        ``use_kernels``: route predicate queries through the fused
+        predicate kernel (DESIGN.md §13) when the discovery index
+        cannot serve them. None (auto) enables it when jax is
+        importable; False pins the pure-numpy scan fallback; True
+        forces the kernel package even without jax (its numpy host
+        oracle — slower than the scan, but it exercises the fallback
+        path end to end)."""
         self.primary = primary
         self.aggregate = aggregate
         self._now = time.time if now is None else now
         self.ingestor = ingestor
+        self.use_kernels = use_kernels
+        #: per-(shard position) device arena cache keyed by mutation
+        #: epoch + row count: {si: ((epoch, n), Arena)}. Entries for a
+        #: pinned snapshot engine never churn; on a live engine each
+        #: mutation batch invalidates by key mismatch. Plain dict ops
+        #: are atomic under the GIL — concurrent readers at worst
+        #: rebuild the same immutable slab twice.
+        self._arena_cache: Dict[int, Tuple] = {}
         # per-thread plan records: concurrent readers sharing one
         # engine (the serving tier admits N at once) must not observe
         # each other's routing decisions
@@ -198,8 +306,161 @@ class QueryEngine:
     def _plan_select(self, qname: str,
                      preds: Sequence[Tuple[str, str, object]]
                      ) -> Optional[np.ndarray]:
-        """Accelerated predicate query, or None -> caller scans."""
-        return self._plan(qname, lambda d: d.select(preds))
+        """Accelerated predicate query, or None -> caller scans. Route
+        order: discovery index (attached + fresh) -> fused predicate
+        kernel (enabled + program expressible) -> numpy scan."""
+        got = self._plan(qname, lambda d: d.select(preds))
+        if got is not None:
+            return got
+        return self._kernel_select(qname, preds)
+
+    # -- the fused predicate-kernel route (DESIGN.md §13) ---------------------
+
+    def _kernels_enabled(self) -> bool:
+        if self.use_kernels is False:
+            return False
+        pk = _predeval()
+        if pk is None:
+            return False
+        # auto mode: without jax the kernel package only offers the
+        # numpy host oracle, which a direct scan beats — decline
+        return bool(self.use_kernels) or pk[0].AVAILABLE
+
+    def _index_shards(self) -> List:
+        """The physical shards a scan walks, in scan (shard-major)
+        order — PrimaryIndex / IndexSnapshot duck-typed alike."""
+        shards = getattr(self.primary, "shards", None)
+        return list(shards) if shards is not None else [self.primary]
+
+    def _shard_arena(self, si: int, sh, n: int):
+        """The (shard, epoch) device arena slab, cached per shard
+        position; a mutation-epoch or row-count change rebuilds."""
+        pk_ops, _ = _predeval()
+        key = (int(sh.mutation_epoch), n)
+        hit = self._arena_cache.get(si)
+        if hit is not None and hit[0] == key:
+            return hit[1]
+        arena = pk_ops.pack_arena(sh.columns, sh.alive, n)
+        self._arena_cache[si] = (key, arena)
+        return arena
+
+    def _kernel_select(self, qname: str,
+                       preds: Sequence[Tuple[str, str, object]]
+                       ) -> Optional[np.ndarray]:
+        """One fused kernel pass per shard: compile the predicate list
+        into a program, evaluate the packed match bitmap over the arena
+        epoch, then exact-verify the candidate slots against the
+        primary arenas — the discovery index's superset discipline, so
+        the result is byte-identical to the scan path in scan order.
+        None -> inexpressible program or kernels disabled (caller
+        scans)."""
+        if not self._kernels_enabled():
+            return None
+        pk_ops, pk_ref = _predeval()
+        prog = pk_ref.compile_program(preds)
+        if prog is None:
+            plan = self.last_plan or {}
+            self.last_plan = dict(plan, reason=(
+                f"{plan.get('reason', '')}; program inexpressible"))
+            return None
+        progs = pk_ref.stack_programs([prog])
+        why = (self.last_plan or {}).get("reason", "")
+        parts, total = [], 0
+        for si, sh in enumerate(self._index_shards()):
+            n = _shard_rows(sh)
+            arena = self._shard_arena(si, sh, n)
+            words = pk_ops.predeval_words(arena, progs)
+            cand = pk_ops.bitmap_slots(words, 0, n)
+            total += len(cand)
+            parts.append(disc.verify_select(sh.alive, sh.columns,
+                                            sh.paths, cand, preds))
+        self.last_plan = {"query": qname, "route": "kernel",
+                          "reason": f"fused kernel ({why})",
+                          "candidates": total}
+        return parts[0] if len(parts) == 1 else np.concatenate(parts)
+
+    def _scan_select(self, preds: Sequence[Tuple[str, str, object]]
+                     ) -> np.ndarray:
+        """The ground-truth scan: exact predicates over the ``live()``
+        view (what every accelerated route must byte-match)."""
+        live = self.primary.live()
+        m = np.ones(len(live["path"]), dtype=bool)
+        for col, op, arg in preds:
+            m &= disc.eval_pred(live[col], op, arg)
+        return live["path"][m]
+
+    def _pred_query(self, qname: str,
+                    preds: Sequence[Tuple[str, str, object]]
+                    ) -> np.ndarray:
+        """Full route cascade for an already-built predicate list (the
+        Table-I methods and the serving tier's time-pinned execution
+        both land here)."""
+        got = self._plan_select(qname, preds)
+        return got if got is not None else self._scan_select(preds)
+
+    def select_many(self, specs: Sequence, now: Optional[float] = None
+                    ) -> List:
+        """Batched query execution (tentpole part c): every expressible
+        predicate query in ``specs`` — each a ``(name, args, kw)``
+        tuple — compiles into one stacked program batch, evaluated in
+        ONE fused kernel pass per shard (one arena read amortized
+        across the whole batch, K bitmaps out), then exact-verified per
+        query. Non-predicate or inexpressible entries dispatch through
+        their normal route. Results align with ``specs`` and are
+        byte-identical to running each query alone; time-relative
+        cutoffs all resolve against the single ``now`` (default: this
+        engine's clock, read once), so a dashboard's queries agree on
+        what time it is."""
+        now = self.now if now is None else float(now)
+        specs = [(name, tuple(args), dict(kw)) for name, args, kw in specs]
+        for name, _, _ in specs:
+            if name not in self.QUERY_METHODS:
+                raise ValueError(f"unknown query {name!r}")
+        results: List = [None] * len(specs)
+        preds_by_i: Dict[int, List] = {}
+        batch: List[Tuple[int, List, dict]] = []
+        pk = _predeval() if self._kernels_enabled() else None
+        for i, (name, args, kw) in enumerate(specs):
+            preds = pred_spec(name, args, kw, now)
+            if preds is None:
+                continue
+            preds_by_i[i] = preds
+            if pk is not None:
+                prog = pk[1].compile_program(preds)
+                if prog is not None:
+                    batch.append((i, preds, prog))
+        batched = {i for i, _, _ in batch}
+        if batch:
+            pk_ops, pk_ref = pk
+            progs = pk_ref.stack_programs([p for _, _, p in batch])
+            parts: Dict[int, List] = {i: [] for i in batched}
+            total = 0
+            for si, sh in enumerate(self._index_shards()):
+                n = _shard_rows(sh)
+                arena = self._shard_arena(si, sh, n)
+                words = pk_ops.predeval_words(arena, progs)
+                for j, (i, preds, _) in enumerate(batch):
+                    cand = pk_ops.bitmap_slots(words, j, n)
+                    total += len(cand)
+                    parts[i].append(disc.verify_select(
+                        sh.alive, sh.columns, sh.paths, cand, preds))
+            for i in batched:
+                p = parts[i]
+                results[i] = p[0] if len(p) == 1 else np.concatenate(p)
+            self.last_plan = {"query": "select_many", "route": "kernel",
+                              "batched": len(batch),
+                              "fallback": len(specs) - len(batch),
+                              "candidates": total}
+        for i, (name, args, kw) in enumerate(specs):
+            if i in batched:
+                continue
+            if i in preds_by_i:
+                # predicate query the kernel could not take (or kernels
+                # disabled): same cascade, same pinned now
+                results[i] = self._pred_query(name, preds_by_i[i])
+            else:
+                results[i] = getattr(self, name)(*args, **kw)
+        return results
 
     def _plan_names(self, qname: str, literals: Sequence[str],
                     match) -> Optional[np.ndarray]:
@@ -254,69 +515,67 @@ class QueryEngine:
 
     def world_writable(self) -> np.ndarray:
         """Table I "world-writable files" (security audit): mode & 0o002.
-        Planner: mode-run sweep + exact verify; fallback reads the
-        live() snapshot of the primary index."""
-        got = self._plan_select("world_writable", [("mode", "mask", 0o002)])
-        if got is not None:
-            return got
-        live = self.primary.live()
-        return live["path"][(live["mode"] & 0o002) != 0]
+        Route cascade (``_pred_query``): discovery-index mode-run sweep
+        -> fused predicate kernel -> live() scan, all byte-identical."""
+        return self._pred_query("world_writable",
+                                [("mode", "mask", 0o002)])
 
     def not_accessed_since(self, seconds: float) -> np.ndarray:
         """Table I "not accessed in N months" (cold-data candidates)."""
-        cutoff = self.now - seconds
-        got = self._plan_select("not_accessed_since",
-                                [("atime", "lt", cutoff)])
-        if got is not None:
-            return got
-        live = self.primary.live()
-        return live["path"][live["atime"] < cutoff]
+        return self._pred_query("not_accessed_since",
+                                [("atime", "lt", self.now - seconds)])
 
     def large_cold_files(self, min_size: float, idle_seconds: float) -> np.ndarray:
-        """Table I "large files with low access" (tiering candidates)."""
-        cutoff = self.now - idle_seconds
-        got = self._plan_select("large_cold_files",
+        """Table I "large files with low access" (tiering candidates).
+
+        ``min_size`` compares against the float32 ``size`` arena — see
+        the storage-dtype rounding contract (DESIGN.md §13.5): above
+        2^24 bytes the STORED size is the float32 rounding of the true
+        size, and the threshold itself is rounded to float32 before the
+        compare (numpy weak-scalar promotion). Every route — scan,
+        discovery, kernel — applies the same rounding; the directed
+        boundary test in tests/test_query_fixes.py pins agreement."""
+        return self._pred_query("large_cold_files",
                                 [("size", "gt", min_size),
-                                 ("atime", "lt", cutoff)])
-        if got is not None:
-            return got
-        live = self.primary.live()
-        m = (live["size"] > min_size) & (live["atime"] < cutoff)
-        return live["path"][m]
+                                 ("atime", "lt", self.now - idle_seconds)])
 
     def duplicate_candidates(self) -> Dict[int, np.ndarray]:
         """GROUP BY checksum HAVING count > 1 (``path_hash`` as the
         stand-in checksum column), keyed by the hash value. Same-size
         files with different hashes are NOT candidates — grouping by
         ``size`` here was a bug that flooded the report on any corpus
-        with repeated sizes."""
+        with repeated sizes.
+
+        Grouping is one stable argsort + boundary scan: the previous
+        implementation rescanned the full inverse array once per
+        duplicated group (``inv == ui`` in a Python loop — O(groups *
+        n), quadratic on dedup-heavy corpora; the regression test in
+        tests/test_query_fixes.py bounds the fixed cost). Stable sort
+        keeps live-row order within each group, so the output is
+        identical: keys ascending, paths in scan order."""
         live = self.primary.live()
         hashes = live["path_hash"].astype(np.int64)
-        uniq, inv, counts = np.unique(hashes, return_inverse=True,
-                                      return_counts=True)
+        order = np.argsort(hashes, kind="stable")
+        h = hashes[order]
+        starts = np.flatnonzero(np.r_[True, h[1:] != h[:-1]])
+        ends = np.r_[starts[1:], len(h)]
+        paths = live["path"]
         out = {}
-        for ui in np.nonzero(counts > 1)[0]:
-            out[int(uniq[ui])] = live["path"][inv == ui]
+        for gi in np.flatnonzero(ends - starts > 1):
+            s = starts[gi]
+            out[int(h[s])] = paths[order[s:ends[gi]]]
         return out
 
     def owned_by_deleted_users(self, active_uids: Sequence[int]) -> np.ndarray:
         """Table I "files owned by deleted users" (orphan sweep)."""
-        uids = list(active_uids)
-        got = self._plan_select("owned_by_deleted_users",
-                                [("uid", "notin", uids)])
-        if got is not None:
-            return got
-        live = self.primary.live()
-        return live["path"][~np.isin(live["uid"], uids)]
+        return self._pred_query("owned_by_deleted_users",
+                                [("uid", "notin", list(active_uids))])
 
     def past_retention(self, retention_seconds: float) -> np.ndarray:
         """Table I "past retention policy" (purge candidates)."""
-        cutoff = self.now - retention_seconds
-        got = self._plan_select("past_retention", [("mtime", "lt", cutoff)])
-        if got is not None:
-            return got
-        live = self.primary.live()
-        return live["path"][live["mtime"] < cutoff]
+        return self._pred_query(
+            "past_retention",
+            [("mtime", "lt", self.now - retention_seconds)])
 
     # -- aggregate-granularity queries (aggregate index) ----------------------
 

@@ -48,7 +48,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.index import AggregateIndex
-from repro.core.query import QueryEngine, merge_freshness
+from repro.core.query import (TIME_RELATIVE, QueryEngine, merge_freshness,
+                              pred_spec)
 
 
 def _canon(obj) -> Any:
@@ -151,7 +152,8 @@ class ServiceSnapshot:
         self.watermark = int(watermark)
         self.engine = QueryEngine(
             view, aggregate, now=service._now,
-            ingestor=_PinnedFreshness(view.freshness_mark))
+            ingestor=_PinnedFreshness(view.freshness_mark),
+            use_kernels=service._use_kernels)
         self._closed = False
 
     @property
@@ -188,12 +190,25 @@ class QueryService:
 
     def __init__(self, primary, aggregate: Optional[AggregateIndex] = None,
                  ingestor=None, now=None, max_readers: int = 16,
-                 cache_capacity: int = 256, pin_aggregate: bool = True):
+                 cache_capacity: int = 256, pin_aggregate: bool = True,
+                 now_bucket_s: float = 1.0, use_kernels=None):
+        """``now_bucket_s``: freshness bucket for TIME-RELATIVE query
+        caching (``not_accessed_since`` / ``large_cold_files`` /
+        ``past_retention``). Their cutoffs derive from the wall clock,
+        so watermark keying alone would serve a frozen cutoff forever
+        at an idle index; instead the resolved clock, quantized to this
+        bucket, joins their cache keys — hits still coalesce within a
+        bucket, and answers can never be more than one bucket stale in
+        wall-clock terms. <= 0 keys on the raw clock (every call
+        misses). ``use_kernels`` passes through to the snapshot
+        engines (core/query.py; None = auto)."""
         self.primary = primary
         self.aggregate = aggregate if aggregate is not None \
             else AggregateIndex()
         self.ingestor = ingestor
         self._now = now
+        self.now_bucket_s = float(now_bucket_s)
+        self._use_kernels = use_kernels
         self._pin_aggregate = bool(pin_aggregate)
         self.cache = ResultCache(cache_capacity)
         self._sem = threading.BoundedSemaphore(int(max_readers))
@@ -216,7 +231,7 @@ class QueryService:
         self._inflight: Dict[Tuple, threading.Event] = {}
         self.stats = {"queries": 0, "pages": 0, "snapshots": 0,
                       "cursors_opened": 0, "cursors_closed": 0,
-                      "coalesced": 0}
+                      "coalesced": 0, "batches": 0}
         for ing in self._ingestors():
             hooks = getattr(ing, "on_apply", None)
             if hooks is not None:
@@ -368,6 +383,32 @@ class QueryService:
 
     # -- queries --------------------------------------------------------------
 
+    def _cache_key(self, name: str, args: Tuple, kw: Dict,
+                   watermark: int, now: float) -> Tuple:
+        """(query, canonical params, data version) — plus, for
+        TIME-RELATIVE queries only, the resolved clock quantized to
+        ``now_bucket_s``. Without the clock component an unchanged
+        watermark would serve a cutoff computed from an earlier clock
+        read indefinitely (tests/test_query_service.py pins the
+        regression); with it, coalescing still works inside a bucket."""
+        key = (name, _canon(args), _canon(kw), watermark)
+        if name in TIME_RELATIVE:
+            b = self.now_bucket_s
+            key += (int(now // b) if b > 0 else now,)
+        return key
+
+    def _execute(self, snap: ServiceSnapshot, name: str, args: Tuple,
+                 kw: Dict, now: float) -> Any:
+        """Run one query on the snapshot engine. Time-relative queries
+        resolve their cutoffs against the SAME ``now`` their cache key
+        quantized (not a fresh clock read inside the method), so the
+        key and the answer can never disagree about what time it is."""
+        if name in TIME_RELATIVE:
+            preds = pred_spec(name, args, kw, now)
+            if preds is not None:
+                return snap.engine._pred_query(name, preds)
+        return getattr(snap.engine, name)(*args, **kw)
+
     def _run_cached(self, snap: ServiceSnapshot, name: str,
                     args: Tuple, kw: Dict) -> Tuple[Any, bool]:
         """Cache lookup with single-flight miss coalescing: the first
@@ -383,7 +424,8 @@ class QueryService:
             raise ValueError(
                 f"unknown query {name!r}; expected one of "
                 f"{sorted(QueryEngine.QUERY_METHODS)}")
-        key = (name, _canon(args), _canon(kw), snap.watermark)
+        now = snap.engine.now
+        key = self._cache_key(name, args, kw, snap.watermark, now)
         while True:
             with self._lock:
                 got = self.cache.get(key)
@@ -398,7 +440,7 @@ class QueryService:
             ev.wait()                   # computer fills the cache (or
             #                             fails; loop re-elects)
         try:
-            result = getattr(snap.engine, name)(*args, **kw)
+            result = self._execute(snap, name, args, kw, now)
             with self._lock:
                 self.cache.put(key, result)
             return result, False
@@ -425,6 +467,76 @@ class QueryService:
         fresh["watermark"] = snap.watermark
         fresh["cached"] = cached
         return {"result": result, "freshness": fresh}
+
+    def query_batch(self, requests) -> List[Dict]:
+        """The dashboard entry point (DESIGN.md §13.4): run many named
+        queries against ONE pooled snapshot and ONE resolved clock.
+        Each request is ``(name, *args)`` or ``{"name", "args", "kw"}``;
+        results align with ``requests``, each in the ``query()`` shape.
+
+        Cache lookups come first (same keys as ``query()``, so batch
+        and single-query traffic share entries); the misses then go
+        through ``QueryEngine.select_many``, which fuses every
+        expressible predicate query into one stacked kernel pass per
+        shard — a 32-panel refresh costs a handful of kernel launches
+        instead of 32 arena scans. Duplicate keys within a batch
+        compute once. Batches skip the single-flight table (one fused
+        pass IS the coalesced form; a concurrent ``query()`` for the
+        same key at worst recomputes one entry)."""
+        specs = []
+        for r in requests:
+            if isinstance(r, dict):
+                specs.append((r["name"], tuple(r.get("args", ())),
+                              dict(r.get("kw", {}))))
+            else:
+                name, *args = r
+                specs.append((name, tuple(args), {}))
+        for name, _, _ in specs:
+            if name not in QueryEngine.QUERY_METHODS:
+                raise ValueError(
+                    f"unknown query {name!r}; expected one of "
+                    f"{sorted(QueryEngine.QUERY_METHODS)}")
+        out: List[Optional[Dict]] = [None] * len(specs)
+        with self._sem:
+            entry = self._acquire_pooled()
+            snap = entry["snap"]
+            try:
+                now = snap.engine.now
+                fresh_base = dict(snap.engine.freshness() or {})
+                fresh_base["watermark"] = snap.watermark
+
+                def wrap(result, cached):
+                    fresh = dict(fresh_base, cached=cached)
+                    return {"result": result, "freshness": fresh}
+
+                miss_by_key: Dict[Tuple, List[int]] = {}
+                keys = []
+                with self._lock:
+                    for i, (name, args, kw) in enumerate(specs):
+                        key = self._cache_key(name, args, kw,
+                                              snap.watermark, now)
+                        keys.append(key)
+                        got = self.cache.get(key)
+                        if got is not ResultCache._MISS:
+                            out[i] = wrap(got, True)
+                        else:
+                            miss_by_key.setdefault(key, []).append(i)
+                if miss_by_key:
+                    first = [idxs[0] for idxs in miss_by_key.values()]
+                    results = snap.engine.select_many(
+                        [specs[i] for i in first], now=now)
+                    with self._lock:
+                        for i, res in zip(first, results):
+                            self.cache.put(keys[i], res)
+                    for idxs, res in zip(miss_by_key.values(), results):
+                        for j, i in enumerate(idxs):
+                            out[i] = wrap(res, j > 0)
+            finally:
+                self._release_pooled(entry)
+        with self._lock:
+            self.stats["queries"] += len(specs)
+            self.stats["batches"] += 1
+        return out
 
     # -- pagination (ingest-stable cursors) -----------------------------------
 

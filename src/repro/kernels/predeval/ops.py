@@ -1,0 +1,132 @@
+"""Dispatch layer for the fused predicate kernel (DESIGN.md §13).
+
+Same contract as the sibling kernel packages (ddsketch / segstats /
+hashshard): callers get one entry point per op and never see jax —
+``AVAILABLE`` is False when jax cannot import, and every op then runs
+the pure-numpy oracle in ref.py (the host fallback the planner also
+uses for inexpressible programs).
+
+Default mode is ``INTERPRET`` (the repo-wide convention): the jitted
+whole-array jax.numpy oracle IS the production CPU route, because
+per-grid-step Pallas interpretation dominates on CPU. Setting
+``REPRO_PALLAS_COMPILE=1`` compiles the real Pallas kernel for TPU
+runs. All three implementations (Pallas / jnp / numpy) are bit-for-bit
+identical on the packed bitmaps — tests/test_predeval.py pins it.
+
+``Arena`` is the device-resident stacked column slab for one shard at
+one mutation epoch: (3, n_pad) float32 + (3, n_pad) int32 + alive,
+padded to a power-of-two multiple of ``BLOCK_ROWS`` so the jitted
+evaluators compile once per shape bucket. The query engine caches one
+per (shard, epoch) — rebuilding it is the per-epoch cost that the K-way
+program batching then amortizes across the query stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.kernels.predeval import ref
+from repro.kernels.predeval.ref import BLOCK_ROWS, FLOAT_COLS, PRED_COLUMNS
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+try:
+    import jax
+    import jax.numpy as jnp
+    AVAILABLE = True
+except Exception:                              # pragma: no cover
+    jax = jnp = None
+    AVAILABLE = False
+
+
+def _pad_rows(n: int) -> int:
+    p = BLOCK_ROWS
+    while p < n:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass
+class Arena:
+    """Stacked column slab for one shard epoch (device arrays when jax
+    is available, numpy otherwise). ``n`` is the true row count; rows
+    n..n_pad-1 are zero-padding with alive=0."""
+
+    fcols: object          # (3, n_pad) float32
+    icols: object          # (3, n_pad) int32
+    alive: object          # (n_pad,) int32
+    n: int
+    n_pad: int
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes one fused pass streams (the roofline numerator)."""
+        return self.n_pad * (3 * 4 + 3 * 4 + 4)
+
+
+def pack_arena(columns: Dict[str, np.ndarray], alive: np.ndarray,
+               n: int) -> Arena:
+    """Build the slab from primary-index arenas (first ``n`` slots —
+    ``len(slot_map)`` on a live index, ``snapshot.n`` on a pinned
+    view). Missing columns materialize as zeros, like ``live()``."""
+    n_pad = _pad_rows(max(n, 1))
+    fcols = np.zeros((FLOAT_COLS, n_pad), np.float32)
+    icols = np.zeros((len(PRED_COLUMNS) - FLOAT_COLS, n_pad), np.int32)
+    for i, col in enumerate(PRED_COLUMNS):
+        arr = columns.get(col)
+        if arr is None:
+            continue
+        if i < FLOAT_COLS:
+            fcols[i, :n] = arr[:n]
+        else:
+            icols[i - FLOAT_COLS, :n] = arr[:n]
+    av = np.zeros(n_pad, np.int32)
+    av[:n] = alive[:n]
+    if AVAILABLE:
+        return Arena(jnp.asarray(fcols), jnp.asarray(icols),
+                     jnp.asarray(av), n, n_pad)
+    return Arena(fcols, icols, av, n, n_pad)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted(has_set: bool, use_pallas: bool):
+    if use_pallas:
+        from repro.kernels.predeval.predeval import predeval
+
+        def fn(fcols, icols, alive, ops, lo, hi, msk, setrows, setcol,
+               setvals):
+            return predeval(fcols, icols, alive, ops, lo, hi, msk,
+                            setrows, setcol, setvals, has_set=has_set)
+    else:
+        def fn(fcols, icols, alive, ops, lo, hi, msk, setrows, setcol,
+               setvals):
+            return ref.predeval_ref(fcols, icols, alive, ops, lo, hi,
+                                    msk, setrows, setcol, setvals,
+                                    has_set=has_set)
+    return jax.jit(fn)
+
+
+def predeval_words(arena: Arena, progs: ref.Programs) -> np.ndarray:
+    """(k_pad, n_pad/32) uint32 packed bitmaps for the program batch —
+    one fused read of the arena regardless of K."""
+    if not AVAILABLE:
+        return ref.predeval_host(arena.fcols, arena.icols, arena.alive,
+                                 progs)
+    fn = _jitted(progs.has_set, not INTERPRET)
+    out = fn(arena.fcols, arena.icols, arena.alive,
+             jnp.asarray(progs.ops), jnp.asarray(progs.lo),
+             jnp.asarray(progs.hi), jnp.asarray(progs.msk),
+             jnp.asarray(progs.setrows), jnp.asarray(progs.setcol),
+             jnp.asarray(progs.setvals))
+    return np.asarray(out)
+
+
+def bitmap_slots(words: np.ndarray, k: int, n: int) -> np.ndarray:
+    """Program k's candidate slot ids (sorted int64) from the packed
+    bitmaps, clamped to the true row count."""
+    bits = ref.unpack_bits(words[k], n)
+    return np.flatnonzero(bits).astype(np.int64)

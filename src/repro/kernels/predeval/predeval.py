@@ -1,0 +1,108 @@
+"""Fused multi-column predicate kernel (Pallas; DESIGN.md §13).
+
+One grid pass over an arena epoch evaluates K stacked predicate
+programs against the six Table-I columns and emits packed match
+bitmaps: the kernel reads each touched column ONCE per row block and
+amortizes that memory traffic across the whole program batch — the
+HAIL per-partition-projection idea taken to its bandwidth-bound limit.
+
+Layout per grid step j (row block of ``BLOCK_ROWS``):
+
+- ``fcols`` (3, n_pad) float32 / ``icols`` (3, n_pad) int32 /
+  ``alive`` (n_pad,) int32 stream through in row blocks;
+- the program arrays (see ref.py for the encoding) are small and fully
+  resident every step;
+- ``out`` (k_pad, n_pad / 32) uint32 — bit (r % 32) of word
+  ``out[k, r // 32]`` is program k's verdict on row r. Bits of
+  disjoint weight are summed in int32 (bit 31 wraps negative with the
+  same pattern) and bitcast to uint32, because a float32 matmul pack
+  would lose bits past the 24-bit mantissa.
+
+Numerics contract (shared with ref.predeval_host / ref.predeval_ref,
+bit-for-bit): RANGE compares the value cast to float32 against
+pre-widened inclusive bounds — a SUPERSET of the exact predicate,
+trimmed by the caller's exact verify; MASK and NOTIN are exact integer
+ops; dead rows never match.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.predeval.ref import (BLOCK_ROWS, FLOAT_COLS, OP_MASK,
+                                        OP_RANGE)
+
+
+def _predeval_kernel(ops_ref, lo_ref, hi_ref, msk_ref, setrows_ref,
+                     setcol_ref, setvals_ref, fcols_ref, icols_ref,
+                     alive_ref, out_ref, *, has_set: bool):
+    k_pad = ops_ref.shape[0]
+    blk = alive_ref.shape[0]
+    match = jnp.broadcast_to((alive_ref[...] != 0)[None, :], (k_pad, blk))
+    f = fcols_ref[...]
+    ic = icols_ref[...]
+    for ci in range(ops_ref.shape[1]):         # static: 6 columns
+        opc = ops_ref[:, ci][:, None]
+        v = (f[ci] if ci < FLOAT_COLS
+             else ic[ci - FLOAT_COLS].astype(jnp.float32))[None, :]
+        in_rng = ((v >= lo_ref[:, ci][:, None])
+                  & (v <= hi_ref[:, ci][:, None]))
+        match &= jnp.where(opc == OP_RANGE, in_rng, True)
+        if ci >= FLOAT_COLS:
+            vi = ic[ci - FLOAT_COLS][None, :]
+            hitm = (vi & msk_ref[:, ci][:, None]) != 0
+            match &= jnp.where(opc == OP_MASK, hitm, True)
+    if has_set:
+        sel = setcol_ref[...][:, None]
+        vi = jnp.where(
+            sel == FLOAT_COLS, ic[0][None, :],
+            jnp.where(sel == FLOAT_COLS + 1, ic[1][None, :],
+                      ic[2][None, :]))         # (ks, blk)
+        hit = jnp.zeros(vi.shape, dtype=bool)
+        for s in range(setvals_ref.shape[1]):  # static unroll
+            hit |= vi == setvals_ref[:, s][:, None]
+        rows = setrows_ref[...]
+        k_iota = jax.lax.broadcasted_iota(jnp.int32, (k_pad, 1), 0)
+        for t in range(rows.shape[0]):         # static: K_set programs
+            # one-hot row select instead of scatter (padding entries
+            # carry setrows == k_pad and select nothing)
+            match &= ~((k_iota == rows[t]) & hit[t][None, :])
+    mm = match.reshape(k_pad, blk // 32, 32).astype(jnp.int32)
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 32), 2)
+    words = jnp.sum(mm << shifts, axis=2, dtype=jnp.int32)
+    out_ref[...] = jax.lax.bitcast_convert_type(words, jnp.uint32)
+
+
+def predeval(fcols, icols, alive, ops, lo, hi, msk, setrows, setcol,
+             setvals, has_set: bool, interpret: bool = False):
+    """(k_pad, n_pad / 32) uint32 packed bitmaps; ``n_pad`` (the arena
+    row count) must be a multiple of ``BLOCK_ROWS``."""
+    k_pad, n_cols = ops.shape
+    n_pad = fcols.shape[1]
+    assert n_pad % BLOCK_ROWS == 0, n_pad
+    grid = (n_pad // BLOCK_ROWS,)
+    ks, s = setvals.shape
+    whole = lambda *shape: pl.BlockSpec(shape, lambda j: (0,) * len(shape))
+    return pl.pallas_call(
+        functools.partial(_predeval_kernel, has_set=has_set),
+        grid=grid,
+        in_specs=[
+            whole(k_pad, n_cols),                       # ops
+            whole(k_pad, n_cols),                       # lo
+            whole(k_pad, n_cols),                       # hi
+            whole(k_pad, n_cols),                       # msk
+            whole(ks),                                  # setrows
+            whole(ks),                                  # setcol
+            whole(ks, s),                               # setvals
+            pl.BlockSpec((3, BLOCK_ROWS), lambda j: (0, j)),   # fcols
+            pl.BlockSpec((3, BLOCK_ROWS), lambda j: (0, j)),   # icols
+            pl.BlockSpec((BLOCK_ROWS,), lambda j: (j,)),       # alive
+        ],
+        out_specs=pl.BlockSpec((k_pad, BLOCK_ROWS // 32),
+                               lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((k_pad, n_pad // 32), jnp.uint32),
+        interpret=interpret,
+    )(ops, lo, hi, msk, setrows, setcol, setvals, fcols, icols, alive)

@@ -43,14 +43,19 @@ LAYOUTS = {"mono": lambda: PrimaryIndex(),
 def make_pair(n_files=4000, seed=0, layout="mono", cfg=None):
     """(accelerated engine, scan-oracle engine) over the same corpus —
     the oracle primary has no discovery index attached, so it can only
-    scan."""
+    scan. Both engines pin ``use_kernels=False``: this suite isolates
+    the discovery-vs-scan equivalence (the fused predicate kernel has
+    its own differential suite, tests/test_predeval.py, and would
+    otherwise absorb the stale-fallback route assertions)."""
     fs = files_only(synth_filesystem(n_files, seed=seed))
     fast, oracle = LAYOUTS[layout](), LAYOUTS[layout]()
     fast.ingest_table(fs, 1)
     oracle.ingest_table(fs, 1)
     fast.attach_discovery(cfg)
-    return (QueryEngine(fast, AggregateIndex(), now=NOW),
-            QueryEngine(oracle, AggregateIndex(), now=NOW), fs)
+    return (QueryEngine(fast, AggregateIndex(), now=NOW,
+                        use_kernels=False),
+            QueryEngine(oracle, AggregateIndex(), now=NOW,
+                        use_kernels=False), fs)
 
 
 QUERIES = [

@@ -96,3 +96,86 @@ def test_now_defaults_to_wallclock():
     before = time.time()
     got = q.now
     assert before - 1.0 <= got <= time.time() + 1.0
+
+
+def test_duplicate_grouping_many_small_groups_identical_and_fast():
+    """ISSUE 7 regression: ``duplicate_candidates`` grouped via an
+    ``inv == ui`` rescan of the full inverse array per duplicated group
+    — O(groups * n). On a dedup-heavy corpus (every file has exactly
+    one twin) that is quadratic: ~19s at 250k rows on the old code vs
+    ~0.2s for the argsort + boundary-scan grouping. The assert below is
+    a generous absolute bound the old implementation cannot meet, plus
+    full equality against a brute-force dict oracle (keys AND within-
+    group path order)."""
+    n = 250_000
+    idx = PrimaryIndex()
+    paths = [f"/fs/dup/f{i}" for i in range(n)]
+    fields = {
+        # synthetic checksums: rows 2i and 2i+1 are twins
+        "path_hash": (np.arange(n, dtype=np.uint32) // 2),
+        "size": np.ones(n, np.float32),
+    }
+    idx.upsert_batch(paths, fields, np.full(n, 1, np.int64))
+    q = QueryEngine(idx, AggregateIndex(), now=1.7e9)
+    t0 = time.perf_counter()
+    dup = q.duplicate_candidates()
+    elapsed = time.perf_counter() - t0
+
+    live = idx.live()
+    expect = {}
+    for hsh, p in zip(live["path_hash"], live["path"]):
+        expect.setdefault(int(hsh), []).append(p)
+    expect = {k: v for k, v in expect.items() if len(v) > 1}
+    assert len(dup) == n // 2
+    assert set(dup) == set(expect)
+    for k, want in expect.items():
+        assert list(dup[k]) == want
+    assert elapsed < 8.0, f"duplicate grouping took {elapsed:.1f}s"
+
+
+def _size_paths(q, threshold, route):
+    """large_cold_files with an always-true idle window: isolates the
+    size predicate on the requested route."""
+    got = sorted(q.large_cold_files(threshold, -1e12))
+    assert q.last_plan["route"] == route, q.last_plan
+    return got
+
+
+def test_float32_size_threshold_boundaries_agree_across_routes():
+    """ISSUE 7 satellite: directed boundary test at sizes straddling
+    2**24 (first float32 gap > 1) and 2**53 (first float64-int gap).
+    The storage dtype is float32 — DESIGN.md §13.5's contract is that
+    every route answers AS IF sizes were float32, identically: the
+    scan, the fused kernel, and the discovery index must agree at
+    thresholds on and off the f32 grid."""
+    near24 = 2.0 ** 24          # f32 spacing 2 beyond this
+    near53 = 2.0 ** 53
+    sizes = [near24 - 2, near24 - 1, near24, near24 + 2, near24 + 3,
+             near53, near53 + 1, 2 * near53]
+    paths = [f"/fs/b/f{i}" for i in range(len(sizes))]
+    # near24 + 1.5 is NOT on the f32 grid: the contract (§13.5) rounds
+    # the threshold to the storage dtype before comparing (numpy weak-
+    # scalar promotion: f32 column > python float compares in f32), so
+    # stored 2^24+2 does NOT exceed it — on every route alike
+    thresholds = [near24 - 1, near24, near24 + 1, near24 + 1.5,
+                  near24 + 2, near24 + 2.5, near53 - 1, near53,
+                  near53 + 1]
+
+    def build(use_kernels, discovery):
+        idx = PrimaryIndex()
+        put(idx, paths, sizes, atime=[0.0] * len(sizes))
+        if discovery:
+            idx.attach_discovery()
+            idx.rebuild_discovery()
+        return QueryEngine(idx, AggregateIndex(), now=1.7e9,
+                           use_kernels=use_kernels)
+
+    scan = build(False, False)
+    kern = build(None, False)
+    disc = build(False, True)
+    f32 = np.array(sizes, np.float32)
+    for t in thresholds:
+        want = sorted(np.array(paths)[f32 > np.float32(t)])
+        assert _size_paths(scan, t, "scan") == want, t
+        assert _size_paths(kern, t, "kernel") == want, t
+        assert _size_paths(disc, t, "discovery") == want, t

@@ -498,3 +498,137 @@ def test_monitor_exports_served_freshness():
     assert 0.0 < out["cache_hit_rate"] <= 1.0
     pinned.close()
     assert mon.run(ev.EventStream(start_fid=10**6))["snapshot_lag"] == 0
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 7: time-relative cache keys + batched dashboard execution
+# ---------------------------------------------------------------------------
+
+def _one_file_service(**kw):
+    idx = PrimaryIndex()
+    idx.upsert_batch(
+        ["/fs/a"], {"path_hash": np.array([1], np.uint32),
+                    "atime": np.array([999.0], np.float32),
+                    "mtime": np.array([999.0], np.float32)},
+        np.array([1], np.int64))
+    t = {"now": 1400.0}
+    svc = QueryService(idx, AggregateIndex(), now=lambda: t["now"], **kw)
+    return idx, t, svc
+
+
+def test_time_relative_cache_follows_clock_without_ingest():
+    """ISSUE 7 regression: a file crosses the idle cutoff purely by the
+    clock advancing — ZERO ingest between the two queries, so the
+    watermark never moves. The old ``(name, args, kw, watermark)`` key
+    served the frozen first answer forever at an idle index."""
+    _, t, svc = _one_file_service()
+    r1 = svc.query("not_accessed_since", 500.0)
+    assert list(r1["result"]) == []          # cutoff 900 < atime 999
+    t["now"] = 1600.0                        # cutoff 1100 > atime 999
+    r2 = svc.query("not_accessed_since", 500.0)
+    assert r2["freshness"]["cached"] is False
+    assert list(r2["result"]) == ["/fs/a"]
+    # the other two time-relative queries key the same way
+    t["now"] = 1400.0
+    assert list(svc.query("past_retention", 500.0)["result"]) == []
+    t["now"] = 1600.0
+    assert list(svc.query("past_retention", 500.0)["result"]) == ["/fs/a"]
+
+
+def test_time_relative_cache_coalesces_within_bucket():
+    """Inside one freshness bucket the clock component of the key is
+    identical — hits still coalesce; a non-time query's key has no
+    clock component at all and survives any clock advance."""
+    _, t, svc = _one_file_service(now_bucket_s=10.0)
+    assert svc.query("not_accessed_since", 500.0)[
+        "freshness"]["cached"] is False
+    t["now"] = 1404.0                        # same 10s bucket
+    assert svc.query("not_accessed_since", 500.0)[
+        "freshness"]["cached"] is True
+    t["now"] = 1411.0                        # next bucket -> recompute
+    assert svc.query("not_accessed_since", 500.0)[
+        "freshness"]["cached"] is False
+    t["now"] = 1400.0
+    assert svc.query("find_by_glob", "/fs/*")[
+        "freshness"]["cached"] is False
+    t["now"] = 9999.0                        # clock-independent query
+    assert svc.query("find_by_glob", "/fs/*")[
+        "freshness"]["cached"] is True
+
+
+def test_time_relative_bucket_zero_disables_coalescing():
+    """Bucket <= 0 keys on the RAW clock: identical reads (a pinned
+    test clock) still hit, but any tick at all misses — no wall-clock
+    staleness window whatsoever."""
+    _, t, svc = _one_file_service(now_bucket_s=0.0)
+    assert svc.query("past_retention", 500.0)[
+        "freshness"]["cached"] is False
+    assert svc.query("past_retention", 500.0)[
+        "freshness"]["cached"] is True       # clock frozen -> same key
+    t["now"] += 1e-6                         # any tick -> miss
+    assert svc.query("past_retention", 500.0)[
+        "freshness"]["cached"] is False
+
+
+BATCH = [
+    ("world_writable",),
+    ("not_accessed_since", 1.5e6),
+    ("large_cold_files", 1e4, 1.7e6),
+    ("owned_by_deleted_users", [0, 1, 2, 3]),
+    ("past_retention", 1.3e6),
+    ("find_by_glob", "/fs/*f*1*"),
+    ("duplicate_candidates",),
+    {"name": "not_accessed_since", "args": (1.5e6,)},     # duplicate
+]
+
+
+@pytest.mark.parametrize("n_shards", [None, 4])
+def test_query_batch_matches_single_queries(n_shards):
+    """§13.4: one pooled snapshot + one clock for the whole dashboard
+    mix; every result byte-identical to the single-query path, cache
+    shared both ways, duplicates computed once."""
+    batches, names = build_workload(300, seed=11)
+    primary, ing, svc = make_service("eager", n_shards, names)
+    _, ing2, ref = make_service("eager", n_shards, names)
+    for b in batches:
+        ing.ingest(b)
+        ing2.ingest(b)
+
+    got = svc.query_batch(BATCH)
+    assert len(got) == len(BATCH)
+    assert svc.stats["batches"] == 1
+    for r, req in zip(got, BATCH):
+        name, args = (req["name"], req["args"]) if isinstance(req, dict) \
+            else (req[0], req[1:])
+        want = ref.query(name, *args)
+        assert_same_result(r["result"], want["result"], name)
+        assert r["freshness"]["watermark"] == want["freshness"]["watermark"]
+    # the duplicate request hit the first occurrence's entry
+    assert got[-1]["freshness"]["cached"] is True
+    assert_same_result(got[-1]["result"], got[1]["result"])
+    # a second identical batch is all cache hits...
+    again = svc.query_batch(BATCH)
+    assert all(r["freshness"]["cached"] for r in again)
+    # ...and single-query traffic shares the same entries
+    assert svc.query("world_writable")["freshness"]["cached"] is True
+
+
+def test_query_batch_rejects_unknown_query():
+    _, _, svc = _one_file_service()
+    with pytest.raises(ValueError, match="unknown query"):
+        svc.query_batch([("world_writable",), ("drop_tables",)])
+
+
+def test_query_batch_time_relative_uses_one_clock():
+    """All time-relative members of one batch resolve the same now —
+    and that now keys their cache entries, so a later batch after a
+    clock advance recomputes instead of serving the old cutoff."""
+    _, t, svc = _one_file_service()
+    r = svc.query_batch([("not_accessed_since", 500.0),
+                         ("past_retention", 500.0)])
+    assert [list(x["result"]) for x in r] == [[], []]
+    t["now"] = 1600.0
+    r = svc.query_batch([("not_accessed_since", 500.0),
+                         ("past_retention", 500.0)])
+    assert [list(x["result"]) for x in r] == [["/fs/a"], ["/fs/a"]]
+    assert not any(x["freshness"]["cached"] for x in r)
