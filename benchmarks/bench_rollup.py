@@ -1,0 +1,199 @@
+"""Subtree-rollup benchmark (ISSUE 8; DESIGN.md §14).
+
+Claims under test, at 1M records on a deep (depth >= 8) tree:
+
+- ``du(path)`` through the rollup tree runs >= 20x faster than the
+  brute-force scan over ``live()`` — with BYTE-IDENTICAL results on
+  every measured rep (the differential oracle, in the timed loop);
+- one incremental policy sweep (only dirty subtrees re-judged, gated
+  on rollup change marks) beats the Robinhood-style full-namespace
+  scan baseline by a wide margin, with identical verdicts.
+
+The rollup side pays its cost at ingest (lazy deltas + bounded upward
+propagation); the bench reports the per-churn-batch propagation work
+counter alongside the read speedups so that cost is visible, not
+hidden. Smoke mode shrinks the corpus for CI bitrot protection; the
+20x gate applies at full size (small corpora shrink the scan cost the
+tree amortizes away).
+"""
+from __future__ import annotations
+
+import gc
+import statistics
+import sys
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import events as ev
+from repro.core import hierarchy as hier
+from repro.core import snapshot as snap
+from repro.core.event_ingest import EventIngestor, IngestConfig
+from repro.core.index import AggregateIndex, PrimaryIndex
+from repro.core.metadata import TYPE_DIR, synth_filesystem
+from repro.core.policy import PolicyEngine, Rule
+from repro.core.query import QueryEngine
+
+SMOKE = "--smoke" in sys.argv[1:]
+CORPUS = 50_000 if SMOKE else 1_000_000
+N_DIRS = 1_500 if SMOKE else 12_000
+REPS = 3
+NOW = 1.7e9
+DAY = 86400.0
+#: the >= 20x du claim is stated at 1M records / deep trees; smoke
+#: corpora gate at a reduced floor (the scan leg is too cheap there)
+NEED_DU = 5.0 if SMOKE else 20.0
+NEED_POLICY = 3.0 if SMOKE else 20.0
+N_CHURN_SWEEPS = 5
+CHURN_FILES = 200
+
+PCFG = snap.PipelineConfig(n_users=32, n_groups=8, n_dirs=64)
+
+
+def timed(fn):
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        out = fn()
+        dt = time.perf_counter() - t0
+    finally:
+        gc.enable()
+    return dt, out
+
+
+def build():
+    """Snapshot-ingest a deep synthetic tree, then hand off to the
+    event path: ``register_tree`` re-seeds the rollup tree (the bulk
+    ingest just invalidated it) and registers churn-victim file fids
+    so later events resolve to real paths."""
+    table = synth_filesystem(CORPUS, n_dirs=N_DIRS, max_depth=12, seed=8)
+    depth = int(table.depth.max())
+    primary = PrimaryIndex()
+    primary.ingest_table(table, version=0)
+
+    ing = EventIngestor(
+        IngestConfig(mode="eager", pad_to=256, max_buffer_events=1024,
+                     freshness_window=1e9, update_aggregates=False),
+        PCFG, primary, AggregateIndex())
+    # fid = table row. Dirs all register; files only the churn victims
+    # (events never touch the rest — no need to carry 1M fid entries).
+    is_dir_rows = np.flatnonzero(table.type == TYPE_DIR)
+    rng = np.random.default_rng(17)
+    victims = rng.choice(np.flatnonzero(table.type != TYPE_DIR),
+                         size=N_CHURN_SWEEPS * CHURN_FILES, replace=False)
+    rows = np.concatenate([is_dir_rows, victims])
+    parents = {int(r): int(table.parent[r]) for r in rows}
+    names = {int(r): str(table.paths[r]).rsplit("/", 1)[-1] if r else "fs"
+             for r in rows}
+    ing.register_tree(parents=parents, names=names,
+                      is_dir={int(r): True for r in is_dir_rows})
+    assert ing.hierarchy.exact
+    return table, primary, ing, victims, depth
+
+
+def du_paths(h):
+    """Root plus two mid-depth directories with big subtrees."""
+    rows = h.hot_directories(k=64, buckets=hier.N_ATIME_BUCKETS)
+    mids = [r["path"] for r in rows if 2 <= r["path"].count("/") <= 4]
+    return ["/fs"] + mids[:2]
+
+
+def main() -> List[str]:
+    fails: List[str] = []
+    t0 = time.perf_counter()
+    table, primary, ing, victims, depth = build()
+    t_build = time.perf_counter() - t0
+    h = ing.hierarchy
+    print(f"corpus={CORPUS} dirs={N_DIRS} max_depth={depth} "
+          f"nodes={h._n}")
+    if depth < 8:
+        fails.append(f"tree depth {depth} < 8 — deep-tree claim untested")
+
+    # -- du vs scan, byte-equality inside the timed loop --------------------
+    q = QueryEngine(primary, AggregateIndex(), now=NOW, ingestor=ing)
+    print("query,depth,scan_ms,rollup_ms,speedup,verdict")
+    for path in du_paths(h):
+        for d in (0, 2):
+            ts, tr = [], []
+            for _ in range(REPS):
+                dt_s, want = timed(
+                    lambda: hier.du_scan(primary.live(), path, depth=d))
+                dt_r, got = timed(lambda: q.du(path, depth=d))
+                if got != want:
+                    fails.append(f"du({path!r}, depth={d}) rollup != scan")
+                    break
+                if q.last_plan["route"] != "rollup":
+                    fails.append(f"du({path!r}) served from "
+                                 f"{q.last_plan['route']}, not rollup")
+                    break
+                ts.append(dt_s)
+                tr.append(dt_r)
+            if not ts:
+                continue
+            ms, mr = statistics.median(ts), statistics.median(tr)
+            speed = ms / max(mr, 1e-9)
+            ok = speed >= NEED_DU
+            print(f"du:{path},{d},{ms * 1e3:.2f},{mr * 1e3:.3f},"
+                  f"{speed:.0f}x,{'pass' if ok else 'FAIL'}")
+            if not ok:
+                fails.append(f"du({path!r}, depth={d}) speedup "
+                             f"{speed:.1f}x < {NEED_DU}x")
+
+    # -- policy: incremental sweeps under churn vs full-scan baseline -------
+    proj = [r["path"] for r in h.hot_directories(k=8)]
+    rules = [Rule(f"proj{i}", "max_bytes", path=p, limit_bytes=1 << 44)
+             for i, p in enumerate(proj)]
+    rules += [Rule("ret2y", "retention", path="/fs", max_age_s=730 * DAY),
+              Rule("u1", "uid_quota", uid=1, limit_bytes=1 << 62),
+              Rule("u2_tight", "uid_quota", uid=2, limit_bytes=1)]
+    eng = PolicyEngine(rules, hierarchy=h, primary=primary)
+    eng.evaluate(watermark=0)            # initial sweep judges everything
+
+    stream = ev.EventStream(start_fid=CORPUS + N_DIRS + 1)
+    sweep_t, prop_work = [], []
+    for i in range(N_CHURN_SWEEPS):
+        for r in victims[i * CHURN_FILES:(i + 1) * CHURN_FILES]:
+            stream.emit(ev.E_SATTR, int(r), has_stat=1,
+                        size=float(1024 + r % 4096), mtime=NOW - 3600.0)
+        p0 = h.stats["propagated"]
+        ing.ingest(stream.take(None))
+        ing.flush()
+        wm = int(ing.freshness()["applied_seq"])
+        dt, _ = timed(lambda: eng.evaluate(watermark=wm))
+        sweep_t.append(dt)
+        prop_work.append(h.stats["propagated"] - p0)
+    t_base, base = timed(eng.full_scan_baseline)
+    verdicts = {r.name: r.name in eng.violations() for r in rules}
+    if verdicts != base:
+        fails.append(f"policy verdicts diverge: incremental={verdicts} "
+                     f"baseline={base}")
+    if not verdicts["u2_tight"]:
+        fails.append("u2_tight quota never fired — bench not exercising "
+                     "violations")
+    m_sweep = statistics.median(sweep_t)
+    speed = t_base / max(m_sweep, 1e-9)
+    print(f"policy,{len(rules)}rules,baseline_ms={t_base * 1e3:.1f},"
+          f"sweep_ms={m_sweep * 1e3:.3f},{speed:.0f}x,"
+          f"{'pass' if speed >= NEED_POLICY else 'FAIL'}")
+    print(f"propagation work per churn batch ({CHURN_FILES} events): "
+          f"median {statistics.median(prop_work):.0f} nodes "
+          f"of {h._n} ({eng.stats['skipped']} rule-judges skipped, "
+          f"{eng.stats['evaluated']} evaluated)")
+    if speed < NEED_POLICY:
+        fails.append(f"policy sweep speedup {speed:.1f}x < {NEED_POLICY}x")
+    if statistics.median(prop_work) > h._n / 2:
+        fails.append("propagation work ~ full recompute; not incremental")
+
+    print(f"(build+seed {t_build:.1f}s)")
+    for f in fails:
+        print(f"VALIDATION FAIL: {f}")
+    if not fails:
+        print(f"validated: du >= {NEED_DU}x with byte-identical answers; "
+              f"policy sweep >= {NEED_POLICY}x vs full scan")
+    return fails
+
+
+if __name__ == "__main__":
+    sys.exit(1 if main() else 0)

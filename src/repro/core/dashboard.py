@@ -85,8 +85,43 @@ def scheduled_report(q: QueryEngine, *, retention_days: float = 730,
     return rep
 
 
+def du_view(q: QueryEngine, path: str, depth: int = 1) -> str:
+    """``du``-on-any-directory panel (DESIGN.md §14): subtree totals
+    plus one row per subdirectory down to ``depth``, served from the
+    rollup tree when exact (``q.last_plan`` records the route)."""
+    d = q.du(path, depth=depth)
+    out = [f"== du {d['path']} ==",
+           f"{_human_bytes(d['total_bytes'])} in {d['file_count']} files"]
+    for row in d["dirs"]:
+        out.append(f"  {row['path']:<32s} {_human_bytes(row['total_bytes']):>10s} "
+                   f"({row['file_count']} files)")
+    return "\n".join(out)
+
+
+def policy_panel(policy) -> str:
+    """Violation panel over a policy.PolicyEngine: active (level) state
+    first, then the most recent enter/exit edges from the event deque."""
+    active = policy.violations()
+    st = policy.stats
+    out = [f"== policy: {len(active)} violation"
+           f"{'' if len(active) == 1 else 's'} active "
+           f"({st['sweeps']} sweeps, {st['evaluated']} evaluated, "
+           f"{st['skipped']} skipped) =="]
+    for name in sorted(active):
+        out.append(f"  VIOLATED {name}: {active[name]}")
+    recent = list(policy.events)[-5:]
+    for ev in recent:
+        out.append(f"  [{ev['edge']}] {ev['rule']} @wm={ev['watermark']}")
+    return "\n".join(out)
+
+
 def render_dashboard(primary: PrimaryIndex, agg: AggregateIndex,
-                     k: int = 5, now=None) -> str:
+                     k: int = 5, now=None, policy=None, hierarchy=None,
+                     du_paths: Sequence[str] = ()) -> str:
+    """``policy`` / ``hierarchy`` / ``du_paths`` are optional add-on
+    panels (all default off — callers predating them render the same
+    dashboard as before): a violation panel per the policy engine, and
+    one ``du_view`` per requested path routed through ``hierarchy``."""
     parts = [
         f"ICICLE DASHBOARD — {len(primary)} live objects, "
         f"{len(agg)} aggregate principals",
@@ -98,4 +133,10 @@ def render_dashboard(primary: PrimaryIndex, agg: AggregateIndex,
     users = [p for p in agg.records if p.startswith("user:")]
     if users:
         parts += ["", principal_summary(agg, users[0], now=now)]
+    if du_paths:
+        q = QueryEngine(primary, agg, now=now, hierarchy=hierarchy)
+        for p in du_paths:
+            parts += ["", du_view(q, p)]
+    if policy is not None:
+        parts += ["", policy_panel(policy)]
     return "\n".join(parts)

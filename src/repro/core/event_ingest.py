@@ -78,6 +78,7 @@ from repro.core import events as ev
 from repro.core import metadata as md
 from repro.core import snapshot as snap
 from repro.core.discovery import index_lag as discovery_index_lag
+from repro.core.hierarchy import HierarchyIndex, resolve_paths_host
 from repro.core.index import (AggregateIndex, PrimaryIndex, bucket_pow2,
                               pack_array, pad_1d, unpack_array)
 from repro.core.sketches import ddsketch as dds
@@ -96,6 +97,7 @@ class IngestConfig:
     use_kernel: bool = False         # Pallas segstats/ddsketch kernels
     filter_opens: bool = True        # drop OPEN events before coalescing
     update_aggregates: bool = True   # maintain the aggregate index too
+    track_hierarchy: bool = True     # maintain subtree rollups (§14)
 
     def __post_init__(self):
         assert self.mode in MODES, self.mode
@@ -236,6 +238,16 @@ class EventIngestor:
                                  else [f"user:{i}" for i in range(pcfg.n_users)]
                                  + [f"group:{i}" for i in range(pcfg.n_groups)]
                                  + [f"dir:{i}" for i in range(pcfg.n_dirs)])
+        # subtree-rollup tree (DESIGN.md §14): mirrors the primary's
+        # live non-dir subjects by post-mutation probe read-back; owned
+        # by this ingestor so every apply/repair/restore keeps it in
+        # lockstep with the watermark
+        self.hierarchy: Optional[HierarchyIndex] = None
+        if cfg.track_hierarchy and hasattr(primary, "probe"):
+            self.hierarchy = HierarchyIndex()
+            attach = getattr(primary, "attach_rollups", None)
+            if attach is not None:
+                attach(self.hierarchy)
         # buffered mode
         self._buffer: List[Dict[str, np.ndarray]] = []
         self._buffered = 0
@@ -342,6 +354,13 @@ class EventIngestor:
                 self._apply_aggregates(count_jobs, up_paths, up_uid,
                                        up_gid, up_size, up_mtime,
                                        new_mask)
+            if self.hierarchy is not None:
+                # repairs are file-grain: mirror-sync both sides through
+                # the same probe read-back the event path uses
+                self.hierarchy.apply_ops(
+                    [("sync", p)
+                     for p in dict.fromkeys([*del_paths, *up_paths])],
+                    self._probe)
             self.metrics["reconciles"] += 1
             self.metrics["repair_upserts"] += n_up
             self.metrics["repair_tombstones"] += int(del_mask.sum())
@@ -438,6 +457,10 @@ class EventIngestor:
             "reconciled_at": self.watermark.reconciled_at,
             "log_lag": int(self.lag_source()) if self.lag_source else 0,
             "index_lag": discovery_index_lag(self.primary),
+            "rollup_dirty": (self.hierarchy.dirty_count()
+                             if self.hierarchy is not None else 0),
+            "rollup_exact": (bool(self.hierarchy.exact)
+                             if self.hierarchy is not None else False),
         }
 
     # -- checkpoint / restore (DESIGN.md §10.3) -------------------------------
@@ -472,6 +495,8 @@ class EventIngestor:
             "counts": pack_array(self.counts),
             "counts_seeded": self._counts_seeded,
             "tree_registered": self._tree_registered,
+            "hierarchy": (self.hierarchy.state_dict()
+                          if self.hierarchy is not None else None),
         }
 
     def load_state(self, state: Dict) -> None:
@@ -505,6 +530,12 @@ class EventIngestor:
         self.counts = counts
         self._counts_seeded = bool(state["counts_seeded"])
         self._tree_registered = bool(state["tree_registered"])
+        # restore the rollup tree AFTER the primary's load_state ran
+        # (its _mutated(None) invalidated the attached hierarchy; the
+        # serialized state re-establishes exactness). A checkpoint that
+        # predates rollups restores as invalid -> scan fallback.
+        if self.hierarchy is not None:
+            self.hierarchy.load_state(state.get("hierarchy"))
         self._buffer, self._buffered = [], 0
         self._first_buffer_ts = None
         # aggregate records are derived state (not serialized):
@@ -529,6 +560,71 @@ class EventIngestor:
     def _notify_applied(self, seq: int, mutated: bool) -> None:
         for cb in self.on_apply:
             cb(seq, mutated)
+
+    # -- subtree-rollup publication (DESIGN.md §14) ---------------------------
+
+    def _probe(self, path: str):
+        return self.primary.probe(path)
+
+    def _publish_hierarchy(self, facts, resolve, dead_fids, dead_paths,
+                           mv_old, rend_fids, rend_old, up_paths,
+                           re_paths) -> None:
+        """Emit one applied chunk's rollup ops IN PHASE ORDER:
+
+        1. syncs at OLD keys (deletes + file-rename sources) — before any
+           subtree re-key can move the registry entries out from under
+           those paths;
+        2. whole-subtree moves for renamed dirs — before this batch's
+           dir creates, so an ensure-chain can never plant a colliding
+           synthetic node at a path a move is about to claim;
+        3. dir registrations (alive dirs at their post-fold paths);
+        4. rmdirs (dead dirs at their pre-fold paths — a dead dir keeps
+           its path mapping for residual-file rollups);
+        5. syncs at NEW keys (upserts + both sides of every repath pair
+           — the old side backstops version-gate-dropped repaths).
+
+        Every sync probes the primary's post-batch state, so the mirror
+        converges on exactly what the version gates actually applied."""
+        isdir_of = {int(f): bool(d)
+                    for f, d in zip(facts["fid"], facts["is_dir"])}
+        ops: List[tuple] = []
+        for p in dict.fromkeys([*dead_paths, *mv_old]):
+            ops.append(("sync", p))
+        moves = [(int(f), old, resolve(int(f)))
+                 for f, old in zip(rend_fids, rend_old)]
+        if moves:
+            # ONE batched op: same-batch move sets can permute arbitrarily
+            # (swaps, nested moves), so they detach/attach as a group
+            ops.append(("move_dirs", moves))
+        live_dirs = facts["is_dir"] & facts["alive"]
+        for f in facts["fid"][live_dirs]:
+            ops.append(("dir", int(f), resolve(int(f))))
+        for f, p in zip(dead_fids, dead_paths):
+            if isdir_of.get(int(f)):
+                ops.append(("rmdir", int(f), p))
+        re_old = re_paths.get("old", []) if re_paths else []
+        re_new = re_paths.get("new", []) if re_paths else []
+        for p in dict.fromkeys([*up_paths, *re_old, *re_new]):
+            ops.append(("sync", p))
+        self.hierarchy.apply_ops(ops, self._probe)
+
+    def _seed_hierarchy(self) -> None:
+        """Rebuild the rollup tree from the registered fid tree + the
+        primary's live view — the snapshot handoff's hierarchy half
+        (register_tree is the resolver half, seed_counts the aggregate
+        half). Restores ``exact`` after bulk ingest invalidation."""
+        h = self.hierarchy
+        if h is None:
+            return
+        dir_fids = sorted({f for f, d in self._is_dir.items() if d}
+                          | {p for p in self._parent.values() if p >= 0})
+        try:
+            paths = resolve_paths_host(self._parent, self._name, dir_fids)
+        except ValueError:               # cycle/overflow: corrupt tree
+            h.invalidate()
+            return
+        pairs = [(f, p) for f, p in zip(dir_fids, paths) if p is not None]
+        h.seed(pairs, self.primary.live())
 
     def _apply(self, batches: List[Dict[str, np.ndarray]]) -> int:
         with self._write_lock():
@@ -600,6 +696,11 @@ class EventIngestor:
         renf_fids = facts["fid"][ren_files]
         renf_old = [pre_resolve(int(f)) for f in renf_fids]
         renf_seq = facts["seq"][ren_files]
+        # rollup moves need the renamed dirs' OWN old paths (pre-fold);
+        # dirs also created this batch never existed at an old path
+        ren_moved = ren_dirs_sel & facts["alive"] & ~facts["created"]
+        rend_fids = facts["fid"][ren_moved]
+        rend_old = [pre_resolve(int(f)) for f in rend_fids]
 
         self._fold_facts(facts)
 
@@ -705,6 +806,7 @@ class EventIngestor:
         # file-rename tombstones: old subject dies at the rename's seq
         moved = [i for i, (f, o) in enumerate(zip(renf_fids, renf_old))
                  if resolve(int(f)) != o]
+        mv_old: List[str] = []
         if moved:
             mv_old = [renf_old[i] for i in moved]
             mv_stats = [self._stat.get(int(renf_fids[i]))
@@ -718,6 +820,11 @@ class EventIngestor:
                 np.array([s.get("gid", 0) for s in mv_stats], np.int32),
                 -1.0, mv_dead))
             self.metrics["repathed"] += len(mv_old)
+
+        if self.hierarchy is not None:
+            self._publish_hierarchy(facts, resolve, dead_fids, dead_paths,
+                                    mv_old, rend_fids, rend_old, up_paths,
+                                    re_paths)
 
         if self.cfg.update_aggregates:
             self._apply_aggregates(count_jobs, up_paths, up_uid, up_gid,
@@ -917,6 +1024,10 @@ class EventIngestor:
         for f, d in (is_dir or {}).items():
             if d:
                 self._is_dir[f] = True
+        # the hierarchy half of the handoff: re-seed the rollup tree
+        # from the registered dirs + the primary's live records (the
+        # bulk snapshot ingest just invalidated it)
+        self._seed_hierarchy()
 
     def _live_descendant_paths(self, dir_fids: np.ndarray,
                                dir_seqs: np.ndarray

@@ -1,4 +1,4 @@
-"""Device-resident directory hierarchy with pointer-jumping path ops.
+"""Directory hierarchy: pointer-jumping path ops + incremental rollups.
 
 The paper's state manager resolves paths by recursive descent over an
 in-memory dict and recursively re-paths descendants on directory renames.
@@ -10,13 +10,39 @@ pointer doubling in O(log depth) vectorized rounds:
 
 which is associative in the (link, acc, plen) carry, so a rename's effect
 on all descendants falls out of one re-computation + diff — no recursion.
+
+ISSUE 8 adds the stateful half (DESIGN.md §14): ``HierarchyIndex``, a
+subtree-rollup tree maintained incrementally from the ingest path. Event
+applies emit small op lists (file syncs, dir registrations, whole-subtree
+moves, rmdirs); file syncs accumulate signed deltas into per-directory
+*own* accumulators and a dirty set, and reads trigger bounded upward
+propagation into *sub* (subtree-inclusive) accumulators — ``du`` on any
+directory is then an O(1) array read instead of an O(n) scan. Directory
+renames re-key the subtree and move its sums wholesale; nothing below the
+moved root is recomputed.
+
+Nodes are identified by *path* (the fid is a mutable label): the file
+registry mirrors the primary index's live non-directory subjects via
+post-mutation probe read-back, so the rollups can never silently desync
+from what the primary actually applied — including version-gate drops,
+lossy feeds later healed by reconcile repairs, and sharded repath
+migration.
+
+The module also ships scan-route oracles (``du_scan`` & co.) sharing the
+exact quantization helpers, so rollup and scan answers are byte-identical
+by construction — the differential tests and the query route-cascade both
+rely on that.
 """
 from __future__ import annotations
 
-from typing import Dict
+import threading
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from .metadata import TYPE_DIR
 
 P_MIX = jnp.uint32(16777619)  # FNV prime; path hash is polynomial in P_MIX
 
@@ -111,16 +137,798 @@ def is_descendant_of(parent: jax.Array, roots_mask: jax.Array,
     return mark[:m]
 
 
-def resolve_paths_host(parent, name, fids) -> list:
-    """Host-side string resolution (reference monitor only)."""
-    out = []
+def resolve_paths_host(parent, name, fids,
+                       max_depth: int = 256) -> List[Optional[str]]:
+    """Host-side string resolution.
+
+    Raises ``ValueError`` on a parent cycle or a chain deeper than
+    ``max_depth``; a fid whose name (or any ancestor's name) is unknown
+    resolves to an explicit ``None`` entry instead of a placeholder path.
+    """
+    out: List[Optional[str]] = []
     for f in fids:
         parts = []
         v = int(f)
-        guard = 0
-        while v >= 0 and guard < 256:
-            parts.append(name.get(v, f"#{v}"))
+        seen = set()
+        known = True
+        while v >= 0:
+            if v in seen:
+                raise ValueError(
+                    f"parent cycle through fid {v} while resolving "
+                    f"fid {int(f)}")
+            if len(parts) >= max_depth:
+                raise ValueError(
+                    f"path depth exceeds {max_depth} while resolving "
+                    f"fid {int(f)}")
+            seen.add(v)
+            if v not in name:
+                known = False
+                break
+            parts.append(name[v])
             v = parent.get(v, -1)
-            guard += 1
-        out.append("/" + "/".join(reversed(parts)))
+        out.append("/" + "/".join(reversed(parts)) if known else None)
     return out
+
+
+# ---------------------------------------------------------------------------
+# rollup quantization contract (shared by the incremental tree AND the
+# scan oracles — byte-identical answers depend on both sides using these)
+# ---------------------------------------------------------------------------
+
+REF_TIME = 1.7e9                       # fixed anchor for atime bucketing
+_DAY = 86400.0
+ATIME_EDGES_S = (7 * _DAY, 30 * _DAY, 90 * _DAY,
+                 180 * _DAY, 365 * _DAY, 730 * _DAY)
+N_ATIME_BUCKETS = len(ATIME_EDGES_S) + 1
+_EDGES = np.asarray(ATIME_EDGES_S, np.float64)
+
+
+def size_bytes_i64(size):
+    """Quantize float sizes to exact int64 bytes so subtree sums are
+    associative and order-independent (float accumulation is neither)."""
+    arr = np.clip(np.rint(np.asarray(size, np.float64)), 0.0, float(2 ** 62))
+    out = arr.astype(np.int64)
+    return out if out.shape else int(out)
+
+
+def atime_bucket(atime, ref: float = REF_TIME):
+    """Coarse age bucket: index i covers ages in [edge[i-1], edge[i])
+    relative to the fixed ``ref`` anchor (bucket 0 = touched within 7d)."""
+    age = np.asarray(ref, np.float64) - np.asarray(atime, np.float64)
+    b = np.searchsorted(_EDGES, age, side="right")
+    out = np.asarray(b, np.int64)
+    return out if out.shape else int(out)
+
+
+def _norm_path(path: str) -> str:
+    """Canonical dir key: virtual root is '', no trailing slash."""
+    p = str(path)
+    if p in ("", "/"):
+        return ""
+    return p.rstrip("/")
+
+
+def _dirname(path: str) -> str:
+    """Parent dir key of ``path`` — '' (the virtual root) for
+    slash-less paths, NOT the path itself (rsplit's behaviour)."""
+    i = path.rfind("/")
+    return path[:i] if i >= 0 else ""
+
+
+def _pack(a: np.ndarray) -> list:
+    return [str(a.dtype), list(a.shape), a.tobytes()]
+
+
+def _unpack(v) -> np.ndarray:
+    dtype, shape, buf = v
+    return np.frombuffer(buf, dtype=dtype).reshape(shape).copy()
+
+
+# ---------------------------------------------------------------------------
+# HierarchyIndex: the incrementally-maintained subtree-rollup tree
+# ---------------------------------------------------------------------------
+
+class HierarchyIndex:
+    """Per-directory rollups (live file count, exact byte total, max
+    mtime, coarse atime histogram) with lazy upward propagation.
+
+    Writes come in as op lists from the ingest path's apply step:
+
+        ("sync", path)                  probe-backed file mirror sync
+        ("dir", fid, path)              directory exists at path
+        ("move_dirs", [(fid, old, new)])  chunk's whole-subtree renames
+        ("rmdir", fid, path)            directory removed
+
+    Ops MUST be emitted in phase order (old-path syncs, then moves, then
+    dir creates, then rmdirs, then new-path syncs) — the emitter owns the
+    ordering; this class is a sequential interpreter.
+
+    ``sync`` probes the primary index for the path's *current* applied
+    state and mirrors it (upsert or remove with signed deltas), so
+    version-gate drops, repair upserts and lossy feeds can never desync
+    the registry from the primary. Deltas land in per-dir ``own_*``
+    accumulators plus a dirty set; ``refresh()`` propagates dirty nodes'
+    ``sub_*`` (subtree-inclusive) accumulators upward in depth order and
+    counts its work in ``stats['propagated']`` — the policy engine's
+    incrementality is asserted against that counter.
+
+    ``exact`` gates trust: out-of-band primary mutations (bulk snapshot
+    ingest, state load) or unmergeable namespace collisions flip it off,
+    queries fall back to the scan route, and ``seed()`` (driven by
+    ``register_tree``) restores exactness from a live rescan.
+    """
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self.exact = True
+        self.apply_epoch = 0
+        self.refresh_seq = 0
+        self.stats = {"ops": 0, "synced": 0, "propagated": 0,
+                      "refreshes": 0, "moves": 0, "seeds": 0,
+                      "invalidations": 0, "compactions": 0}
+        self._reset_nodes()
+
+    # -- storage ------------------------------------------------------------
+
+    def _reset_nodes(self) -> None:
+        cap = 64
+        self._cap = cap
+        self._n = 0
+        self.parent_nid = np.full(cap, -1, np.int32)
+        self.depth = np.zeros(cap, np.int32)
+        self.alive = np.zeros(cap, bool)
+        self.fid = np.full(cap, -1, np.int64)
+        self.own_count = np.zeros(cap, np.int64)
+        self.own_bytes = np.zeros(cap, np.int64)
+        self.own_max = np.full(cap, -np.inf)
+        self.own_hist_n = np.zeros((cap, N_ATIME_BUCKETS), np.int64)
+        self.own_hist_b = np.zeros((cap, N_ATIME_BUCKETS), np.int64)
+        self.sub_count = np.zeros(cap, np.int64)
+        self.sub_bytes = np.zeros(cap, np.int64)
+        self.sub_max = np.full(cap, -np.inf)
+        self.sub_hist_n = np.zeros((cap, N_ATIME_BUCKETS), np.int64)
+        self.sub_hist_b = np.zeros((cap, N_ATIME_BUCKETS), np.int64)
+        self._path: List[str] = []
+        self._dir_by_path: Dict[str, int] = {}
+        self._children: Dict[int, set] = {}
+        self._files_of: Dict[int, set] = {}
+        self._file: Dict[str, Tuple[int, int, int, float]] = {}
+        self._dirty: set = set()
+        self._own_max_dirty: set = set()
+        self._change_seq: Dict[int, int] = {}
+        self._new_node("", -1)           # nid 0: virtual root
+
+    def _grow(self, need: int) -> None:
+        cap = self._cap
+        while cap < need:
+            cap *= 2
+        for name in ("parent_nid", "depth", "alive", "fid",
+                     "own_count", "own_bytes", "own_max",
+                     "sub_count", "sub_bytes", "sub_max"):
+            old = getattr(self, name)
+            fill = (-1 if name in ("parent_nid", "fid")
+                    else (-np.inf if name.endswith("max") else 0))
+            new = np.full(cap, fill, old.dtype)
+            new[:self._n] = old[:self._n]
+            setattr(self, name, new)
+        for name in ("own_hist_n", "own_hist_b",
+                     "sub_hist_n", "sub_hist_b"):
+            old = getattr(self, name)
+            new = np.zeros((cap, N_ATIME_BUCKETS), np.int64)
+            new[:self._n] = old[:self._n]
+            setattr(self, name, new)
+        self._cap = cap
+
+    def _new_node(self, path: str, parent: int, fid: int = -1) -> int:
+        if self._n + 1 > self._cap:
+            self._grow(self._n + 1)
+        nid = self._n
+        self._n += 1
+        self.parent_nid[nid] = parent
+        self.depth[nid] = 0 if parent < 0 else int(self.depth[parent]) + 1
+        self.alive[nid] = True
+        self.fid[nid] = fid
+        self._path.append(path)
+        self._dir_by_path[path] = nid
+        self._children[nid] = set()
+        if parent >= 0:
+            self._children[parent].add(nid)
+        return nid
+
+    def _ensure_dir(self, path: str) -> int:
+        nid = self._dir_by_path.get(path)
+        if nid is not None:
+            return nid
+        if path == "":
+            return 0
+        pnid = self._ensure_dir(_dirname(path))
+        return self._new_node(path, pnid)
+
+    # -- file mirror --------------------------------------------------------
+
+    def _add_file(self, path: str, size: float, at: float,
+                  mt: float) -> None:
+        nid = self._ensure_dir(_dirname(path))
+        sz = size_bytes_i64(size)
+        bk = atime_bucket(at)
+        self.own_count[nid] += 1
+        self.own_bytes[nid] += sz
+        self.own_hist_n[nid, bk] += 1
+        self.own_hist_b[nid, bk] += sz
+        if mt > self.own_max[nid]:
+            self.own_max[nid] = mt
+        self._files_of.setdefault(nid, set()).add(path)
+        self._file[path] = (nid, sz, bk, mt)
+        self._dirty.add(nid)
+
+    def _remove_file(self, path: str) -> None:
+        nid, sz, bk, mt = self._file.pop(path)
+        self.own_count[nid] -= 1
+        self.own_bytes[nid] -= sz
+        self.own_hist_n[nid, bk] -= 1
+        self.own_hist_b[nid, bk] -= sz
+        fs = self._files_of.get(nid)
+        if fs is not None:
+            fs.discard(path)
+            if not fs:
+                del self._files_of[nid]
+        if mt >= self.own_max[nid]:
+            self._own_max_dirty.add(nid)
+        self._dirty.add(nid)
+
+    def _sync_one(self, path: str, probe) -> None:
+        self.stats["synced"] += 1
+        rec = None
+        res = probe(path)
+        if res is not None:
+            alive_flag, fields = res
+            if (alive_flag and fields is not None
+                    and int(fields.get("type", 0)) != TYPE_DIR):
+                rec = fields
+        old = self._file.get(path)
+        if rec is None:
+            if old is not None:
+                self._remove_file(path)
+            return
+        size = float(rec.get("size", 0.0))
+        at = float(rec.get("atime", 0.0))
+        mt = float(rec.get("mtime", 0.0))
+        if old is not None:
+            nid = self._dir_by_path.get(_dirname(path))
+            if (old[0] == nid and old[1] == size_bytes_i64(size)
+                    and old[2] == atime_bucket(at) and old[3] == mt):
+                return                   # zero-delta: stay clean
+            self._remove_file(path)
+        self._add_file(path, size, at, mt)
+
+    # -- directory ops ------------------------------------------------------
+
+    def _dir_op(self, fid: int, path: str) -> None:
+        nid = self._dir_by_path.get(path)
+        if nid is None:
+            nid = self._ensure_dir(path)
+            self.fid[nid] = fid
+            return
+        if not self.alive[nid]:          # revival: path reused for a new dir
+            self.alive[nid] = True
+            self.fid[nid] = fid
+            return
+        cur = int(self.fid[nid])
+        if cur >= 0 and fid >= 0 and cur != fid:
+            self.invalidate()            # two live dirs claim one path
+            return
+        if fid >= 0:
+            self.fid[nid] = fid
+
+    def _detach_node(self, nid: int) -> None:
+        p = self._path[nid]
+        if self._dir_by_path.get(p) == nid:
+            del self._dir_by_path[p]
+        par = int(self.parent_nid[nid])
+        if par >= 0:
+            self._children[par].discard(nid)
+        self.parent_nid[nid] = -1
+        self.alive[nid] = False
+
+    def _move_dirs(self, moves) -> None:
+        """Apply one chunk's whole-subtree renames AS A GROUP. Same-batch
+        move sets permute arbitrarily (A<->B swaps, a child moving out of
+        a parent that itself moves, a move into a path another move just
+        vacated), so sequential application would hit spurious collisions
+        or stale keys. Two phases over pre-batch-consistent old paths:
+
+        - detach, deepest old path first (children leave a subtree before
+          the subtree's own walk, so no node detaches twice): unlink the
+          root, walk the subtree, pull every dir key and file entry into
+          a limbo record of relative suffixes;
+        - attach, shallowest NEW path first (a move targeting a path
+          under another move's destination finds that subtree already in
+          place): ensure the new parent chain, absorb a trivially-empty
+          placeholder at the destination (anything else is an unmergeable
+          collision -> invalidate), then re-key the limbo under the new
+          prefix with rebased depths.
+
+        Subtree sums ride along untouched; only the vacated and receiving
+        parents are dirtied."""
+        real = []
+        for fid, old, new in moves:
+            if old == new:
+                continue
+            if new.startswith(old + "/"):
+                self.invalidate()        # move into own subtree: corrupt feed
+                return
+            real.append((fid, old, new, self._dir_by_path.get(old)))
+        detached = []                    # (fid, new, src, nodes, files)
+        for fid, old, new, src in sorted(
+                real, key=lambda m: -m[1].count("/")):
+            if src is None:
+                detached.append((fid, new, None, None, None))
+                continue
+            par = int(self.parent_nid[src])
+            if par >= 0:
+                self._children[par].discard(src)
+                self._dirty.add(par)
+            self.parent_nid[src] = -1
+            nodes = []                   # (nid, suffix rel to the root)
+            files = []                   # (nid, suffix, record-sans-nid)
+            stack = [(src, "")]
+            while stack:
+                v, rel = stack.pop()
+                nodes.append((v, rel))
+                p = self._path[v]
+                if self._dir_by_path.get(p) == v:
+                    del self._dir_by_path[p]
+                for fp in self._files_of.pop(v, ()):
+                    files.append(
+                        (v, rel + fp[len(p):], self._file.pop(fp)[1:]))
+                for c in self._children.get(v, ()):
+                    q = self._path[c]
+                    stack.append((c, rel + q[q.rfind("/"):]))
+            detached.append((fid, new, src, nodes, files))
+        for fid, new, src, nodes, files in sorted(
+                detached, key=lambda m: m[1].count("/")):
+            if src is None:              # unknown source: feed gap — the
+                nid = self._ensure_dir(new)   # dest dir still exists
+                if fid >= 0:
+                    self.fid[nid] = fid
+                continue
+            new_parent = self._ensure_dir(_dirname(new))
+            dest = self._dir_by_path.get(new)
+            if dest is not None:
+                # absorb only a trivially empty placeholder; anything
+                # else is a collision we cannot merge incrementally
+                if (self._children.get(dest) or self._files_of.get(dest)
+                        or self.own_count[dest] or self.sub_count[dest]):
+                    self.invalidate()
+                    return
+                self._detach_node(dest)
+            self.parent_nid[src] = new_parent
+            self._children[new_parent].add(src)
+            self._dirty.add(new_parent)
+            base_depth = int(self.depth[new_parent]) + 1
+            for v, rel in nodes:
+                q = new + rel
+                self._path[v] = q
+                self._dir_by_path[q] = v
+                self.depth[v] = base_depth + rel.count("/")
+            for v, suffix, rec in files:
+                fp = new + suffix
+                self._file[fp] = (v,) + rec
+                self._files_of.setdefault(v, set()).add(fp)
+            if fid >= 0:
+                self.fid[src] = fid
+            self.stats["moves"] += 1
+
+    def _rmdir(self, fid: int, path: str) -> None:
+        nid = self._dir_by_path.get(path)
+        if nid is not None:
+            # keep the path mapping: residual files synced later (or
+            # never deleted) must still roll up under this location
+            self.alive[nid] = False
+
+    # -- public write API ---------------------------------------------------
+
+    def apply_ops(self, ops, probe) -> None:
+        """Apply one chunk's ops (already in phase order)."""
+        with self._lock:
+            if not self.exact:
+                return
+            for op in ops:
+                kind = op[0]
+                if kind == "sync":
+                    self._sync_one(op[1], probe)
+                elif kind == "move_dirs":
+                    self._move_dirs(op[1])
+                elif kind == "dir":
+                    self._dir_op(op[1], op[2])
+                elif kind == "rmdir":
+                    self._rmdir(op[1], op[2])
+                if not self.exact:
+                    return
+            if ops:
+                self.apply_epoch += 1
+                self.stats["ops"] += len(ops)
+
+    def seed(self, dir_paths, live) -> None:
+        """Rebuild from scratch: register known dirs, rescan the live
+        view, restore exactness. Driven by ``register_tree``."""
+        with self._lock:
+            self._reset_nodes()
+            for fid, p in dir_paths:
+                nid = self._ensure_dir(_norm_path(p))
+                if fid is not None and int(fid) >= 0:
+                    self.fid[nid] = int(fid)
+            paths = live["path"]
+            size = live["size"]
+            at = live["atime"]
+            mt = live["mtime"]
+            typ = live.get("type")
+            for i in range(len(paths)):
+                if typ is not None and int(typ[i]) == TYPE_DIR:
+                    self._ensure_dir(_norm_path(str(paths[i])))
+                    continue
+                self._add_file(str(paths[i]), float(size[i]),
+                               float(at[i]), float(mt[i]))
+            self.refresh()
+            self.exact = True
+            self.apply_epoch += 1
+            self.stats["seeds"] += 1
+
+    def invalidate(self) -> None:
+        """Out-of-band primary mutation (bulk ingest, state load) or an
+        unmergeable collision: rollups are no longer trusted; queries
+        fall back to scan until the next ``seed()``."""
+        with self._lock:
+            if self.exact:
+                self.exact = False
+                self.apply_epoch += 1
+            self.stats["invalidations"] += 1
+
+    def note_compaction(self) -> None:
+        """Compaction rewrites slots but changes no live record — the
+        path-keyed mirror is untouched by construction."""
+        with self._lock:
+            self.stats["compactions"] += 1
+
+    # -- lazy propagation ---------------------------------------------------
+
+    def refresh(self) -> int:
+        """Propagate pending own_* deltas up into sub_* accumulators.
+        Returns the number of nodes touched (also accumulated into
+        ``stats['propagated']`` — the incrementality counter)."""
+        with self._lock:
+            if not self._dirty and not self._own_max_dirty:
+                return 0
+            for nid in self._own_max_dirty:
+                fs = self._files_of.get(nid)
+                self.own_max[nid] = (max(self._file[p][3] for p in fs)
+                                     if fs else -np.inf)
+                self._dirty.add(nid)
+            self._own_max_dirty.clear()
+            affected = set()
+            for nid in self._dirty:
+                v = nid
+                while v >= 0 and v not in affected:
+                    affected.add(v)
+                    v = int(self.parent_nid[v])
+            self.refresh_seq += 1
+            order = sorted(affected,
+                           key=lambda n: (-int(self.depth[n]), n))
+            for nid in order:
+                c = int(self.own_count[nid])
+                b = int(self.own_bytes[nid])
+                m = float(self.own_max[nid])
+                hn = self.own_hist_n[nid].copy()
+                hb = self.own_hist_b[nid].copy()
+                for k in self._children.get(nid, ()):
+                    c += int(self.sub_count[k])
+                    b += int(self.sub_bytes[k])
+                    if self.sub_max[k] > m:
+                        m = float(self.sub_max[k])
+                    hn += self.sub_hist_n[k]
+                    hb += self.sub_hist_b[k]
+                if (c != self.sub_count[nid] or b != self.sub_bytes[nid]
+                        or m != self.sub_max[nid]
+                        or not np.array_equal(hn, self.sub_hist_n[nid])
+                        or not np.array_equal(hb, self.sub_hist_b[nid])):
+                    self.sub_count[nid] = c
+                    self.sub_bytes[nid] = b
+                    self.sub_max[nid] = m
+                    self.sub_hist_n[nid] = hn
+                    self.sub_hist_b[nid] = hb
+                    self._change_seq[nid] = self.refresh_seq
+            self.stats["propagated"] += len(order)
+            self.stats["refreshes"] += 1
+            self._dirty.clear()
+            return len(order)
+
+    def dirty_count(self) -> int:
+        with self._lock:
+            return len(self._dirty | self._own_max_dirty)
+
+    # -- reads --------------------------------------------------------------
+
+    @staticmethod
+    def _maxv(m: float) -> float:
+        return float(m) if m != -np.inf else 0.0
+
+    def du(self, path: str, depth: int = 0) -> dict:
+        """Instant `du`: subtree totals for ``path``, plus per-dir rows
+        down to ``depth`` levels (dirs with at least one subtree file)."""
+        with self._lock:
+            self.refresh()
+            path = _norm_path(path)
+            nid = self._dir_by_path.get(path)
+            out = {"path": path or "/", "file_count": 0, "total_bytes": 0,
+                   "max_mtime": 0.0, "dirs": []}
+            if nid is None:
+                return out
+            out["file_count"] = int(self.sub_count[nid])
+            out["total_bytes"] = int(self.sub_bytes[nid])
+            out["max_mtime"] = self._maxv(self.sub_max[nid])
+            if depth > 0:
+                rows = []
+                stack = [(c, 1) for c in self._children.get(nid, ())]
+                while stack:
+                    v, d = stack.pop()
+                    if not self.sub_count[v]:
+                        continue         # no subtree files anywhere below
+                    rows.append({
+                        "path": self._path[v],
+                        "file_count": int(self.sub_count[v]),
+                        "total_bytes": int(self.sub_bytes[v]),
+                        "max_mtime": self._maxv(self.sub_max[v]),
+                    })
+                    if d < depth:
+                        stack.extend(
+                            (c, d + 1) for c in self._children.get(v, ()))
+                rows.sort(key=lambda r: r["path"])
+                out["dirs"] = rows
+            return out
+
+    def subtree_summary(self, path: str) -> dict:
+        with self._lock:
+            self.refresh()
+            path = _norm_path(path)
+            nid = self._dir_by_path.get(path)
+            if nid is None:
+                return {"path": path or "/", "file_count": 0,
+                        "total_bytes": 0, "max_mtime": 0.0,
+                        "atime_histogram": {
+                            "counts": [0] * N_ATIME_BUCKETS,
+                            "bytes": [0] * N_ATIME_BUCKETS},
+                        "dirs_with_files": 0}
+            n = self._n
+            roots = np.zeros(n, bool)
+            roots[nid] = True
+            md = max(64, int(self.depth[:n].max()) + 1)
+            mask = np.asarray(is_descendant_of(
+                jnp.asarray(self.parent_nid[:n]), jnp.asarray(roots),
+                max_depth=md))
+            dwf = int(np.count_nonzero(mask & (self.own_count[:n] > 0)))
+            return {
+                "path": path or "/",
+                "file_count": int(self.sub_count[nid]),
+                "total_bytes": int(self.sub_bytes[nid]),
+                "max_mtime": self._maxv(self.sub_max[nid]),
+                "atime_histogram": {
+                    "counts": [int(x) for x in self.sub_hist_n[nid]],
+                    "bytes": [int(x) for x in self.sub_hist_b[nid]]},
+                "dirs_with_files": dwf,
+            }
+
+    def hot_directories(self, k: int = 10, buckets: int = 2) -> list:
+        """Directories ranked by bytes in the ``buckets`` most-recent
+        atime buckets of their DIRECT files (REF_TIME-anchored)."""
+        with self._lock:
+            self.refresh()
+            rows = []
+            for nid in sorted(self._files_of):
+                if not self.own_count[nid]:
+                    continue
+                rows.append({
+                    "path": self._path[nid] or "/",
+                    "hot_bytes": int(self.own_hist_b[nid, :buckets].sum()),
+                    "hot_count": int(self.own_hist_n[nid, :buckets].sum()),
+                    "total_bytes": int(self.own_bytes[nid]),
+                    "file_count": int(self.own_count[nid]),
+                })
+            rows.sort(key=lambda r: (-r["hot_bytes"], r["path"]))
+            return rows[:k]
+
+    def change_mark(self, path: str) -> tuple:
+        """Cheap has-anything-changed token for a subtree: compare two
+        marks for equality; unequal means the subtree rollup changed (or
+        the dir appeared/moved). Policy skip-logic keys on this."""
+        with self._lock:
+            self.refresh()
+            nid = self._dir_by_path.get(_norm_path(path))
+            if nid is None:
+                return (-1, -1)
+            return (nid, self._change_seq.get(nid, 0))
+
+    def validate_depths(self) -> bool:
+        """Cross-check stored depths against a pointer-doubling
+        recomputation (``depth_all``) — test/debug invariant."""
+        with self._lock:
+            n = self._n
+            md = max(64, int(self.depth[:n].max()) + 1)
+            d = np.asarray(depth_all(jnp.asarray(self.parent_nid[:n]),
+                                     max_depth=md))
+            return bool(np.array_equal(d, self.depth[:n]))
+
+    # -- persistence --------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        with self._lock:
+            self.refresh()               # canonical: no pending deltas
+            n = self._n
+            return {
+                "exact": bool(self.exact),
+                "apply_epoch": int(self.apply_epoch),
+                "n": n,
+                "paths": list(self._path),
+                "parent": _pack(self.parent_nid[:n]),
+                "depth": _pack(self.depth[:n]),
+                "alive": _pack(self.alive[:n]),
+                "fid": _pack(self.fid[:n]),
+                "own_count": _pack(self.own_count[:n]),
+                "own_bytes": _pack(self.own_bytes[:n]),
+                "own_max": _pack(self.own_max[:n]),
+                "own_hist_n": _pack(self.own_hist_n[:n]),
+                "own_hist_b": _pack(self.own_hist_b[:n]),
+                "sub_count": _pack(self.sub_count[:n]),
+                "sub_bytes": _pack(self.sub_bytes[:n]),
+                "sub_max": _pack(self.sub_max[:n]),
+                "sub_hist_n": _pack(self.sub_hist_n[:n]),
+                "sub_hist_b": _pack(self.sub_hist_b[:n]),
+                "dir_by_path": sorted(self._dir_by_path.items()),
+                "files": [[p, int(t[0]), int(t[1]), int(t[2]), float(t[3])]
+                          for p, t in sorted(self._file.items())],
+            }
+
+    def load_state(self, state: Optional[dict]) -> None:
+        with self._lock:
+            self._reset_nodes()
+            if not state:
+                self.invalidate()        # checkpoint predates rollups
+                return
+            n = int(state["n"])
+            self._grow(max(n, 1))
+            self._n = n
+            for name, key in (("parent_nid", "parent"), ("depth", "depth"),
+                              ("alive", "alive"), ("fid", "fid"),
+                              ("own_count", "own_count"),
+                              ("own_bytes", "own_bytes"),
+                              ("own_max", "own_max"),
+                              ("own_hist_n", "own_hist_n"),
+                              ("own_hist_b", "own_hist_b"),
+                              ("sub_count", "sub_count"),
+                              ("sub_bytes", "sub_bytes"),
+                              ("sub_max", "sub_max"),
+                              ("sub_hist_n", "sub_hist_n"),
+                              ("sub_hist_b", "sub_hist_b")):
+                arr = _unpack(state[key])
+                getattr(self, name)[:n] = arr
+            self._path = [str(p) for p in state["paths"]]
+            self._dir_by_path = {str(p): int(v)
+                                 for p, v in state["dir_by_path"]}
+            self._children = {nid: set() for nid in range(n)}
+            for nid in range(n):
+                par = int(self.parent_nid[nid])
+                if par >= 0:
+                    self._children[par].add(nid)
+            self._file = {}
+            self._files_of = {}
+            for p, nid, sz, bk, mt in state["files"]:
+                self._file[str(p)] = (int(nid), int(sz), int(bk), float(mt))
+                self._files_of.setdefault(int(nid), set()).add(str(p))
+            self._dirty = set()
+            self._own_max_dirty = set()
+            self._change_seq = {}
+            self.refresh_seq = 0
+            self.exact = bool(state["exact"])
+            self.apply_epoch = int(state["apply_epoch"])
+
+
+# ---------------------------------------------------------------------------
+# scan-route oracles: brute-force recomputation over a live() view, using
+# the SAME quantization helpers — byte-identical to the rollup answers
+# ---------------------------------------------------------------------------
+
+def _live_files(live):
+    typ = live.get("type")
+    paths = live["path"]
+    size = live["size"]
+    at = live["atime"]
+    mt = live["mtime"]
+    for i in range(len(paths)):
+        if typ is not None and int(typ[i]) == TYPE_DIR:
+            continue
+        yield (str(paths[i]), float(size[i]), float(at[i]), float(mt[i]))
+
+
+def du_scan(live, path: str, depth: int = 0) -> dict:
+    path = _norm_path(path)
+    # virtual root: empty prefix matches every dirname (startswith(""))
+    pre = path + "/" if path else ""
+    total_c = 0
+    total_b = 0
+    total_m = -np.inf
+    per: Dict[str, list] = {}
+    for p, sz, _at, mt in _live_files(live):
+        dp = _dirname(p)
+        if not (dp == path or dp.startswith(pre)):
+            continue
+        b = size_bytes_i64(sz)
+        total_c += 1
+        total_b += b
+        if mt > total_m:
+            total_m = mt
+        if depth > 0 and dp != path:
+            # under the virtual root the relative part keeps its leading
+            # slash ("/fs") — strip it and rebase keys on "/" instead
+            rel, base = (dp[len(pre):], pre) if path else (dp[1:], "/")
+            comps = rel.split("/")
+            for j in range(1, min(len(comps), depth) + 1):
+                key = base + "/".join(comps[:j])
+                row = per.setdefault(key, [0, 0, -np.inf])
+                row[0] += 1
+                row[1] += b
+                if mt > row[2]:
+                    row[2] = mt
+    dirs = [{"path": q, "file_count": r[0], "total_bytes": int(r[1]),
+             "max_mtime": float(r[2]) if r[2] != -np.inf else 0.0}
+            for q, r in sorted(per.items())]
+    return {"path": path or "/", "file_count": total_c,
+            "total_bytes": int(total_b),
+            "max_mtime": float(total_m) if total_m != -np.inf else 0.0,
+            "dirs": dirs}
+
+
+def subtree_summary_scan(live, path: str) -> dict:
+    path = _norm_path(path)
+    pre = path + "/" if path else ""
+    c = 0
+    b = 0
+    m = -np.inf
+    hn = np.zeros(N_ATIME_BUCKETS, np.int64)
+    hb = np.zeros(N_ATIME_BUCKETS, np.int64)
+    dwf = set()
+    for p, sz, at, mt in _live_files(live):
+        dp = _dirname(p)
+        if not (dp == path or dp.startswith(pre)):
+            continue
+        q = size_bytes_i64(sz)
+        bk = atime_bucket(at)
+        c += 1
+        b += q
+        if mt > m:
+            m = mt
+        hn[bk] += 1
+        hb[bk] += q
+        dwf.add(dp)
+    return {"path": path or "/", "file_count": c, "total_bytes": int(b),
+            "max_mtime": float(m) if m != -np.inf else 0.0,
+            "atime_histogram": {"counts": [int(x) for x in hn],
+                                "bytes": [int(x) for x in hb]},
+            "dirs_with_files": len(dwf)}
+
+
+def hot_directories_scan(live, k: int = 10, buckets: int = 2) -> list:
+    per: Dict[str, list] = {}
+    for p, sz, at, _mt in _live_files(live):
+        dp = _dirname(p)
+        q = size_bytes_i64(sz)
+        bk = atime_bucket(at)
+        row = per.setdefault(dp, [0, 0, 0, 0])
+        row[2] += 1
+        row[3] += q
+        if bk < buckets:
+            row[0] += 1
+            row[1] += q
+    rows = [{"path": dp or "/", "hot_bytes": int(r[1]), "hot_count": r[0],
+             "total_bytes": int(r[3]), "file_count": r[2]}
+            for dp, r in per.items()]
+    rows.sort(key=lambda r: (-r["hot_bytes"], r["path"]))
+    return rows[:k]

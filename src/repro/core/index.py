@@ -231,6 +231,12 @@ class PrimaryIndex:
     #: ``_mutated`` — structural rewrites invalidate instead
     discovery: Optional[object] = dataclasses.field(
         default=None, repr=False, compare=False)
+    #: optional attached hierarchy.HierarchyIndex (subtree rollups,
+    #: DESIGN.md §14): structural rewrites the rollup mirror cannot
+    #: absorb incrementally invalidate it; compaction (live rows
+    #: unchanged) only notifies. NOT serialized.
+    rollups: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
     #: MVCC machinery (DESIGN.md §12) — none of it serialized.
     #: Reentrant write lock: every mutator below runs under it
     #: (``_locked``), and ``snapshot()`` pins under it too.
@@ -252,6 +258,10 @@ class PrimaryIndex:
         scans until a rebuild. Called at the END of each mutating op,
         so a triggered delta merge reads consistent arenas."""
         self.mutation_epoch += 1
+        if slots is None and self.rollups is not None:
+            # bulk snapshot ingest / state load: the path-keyed rollup
+            # mirror cannot replay that — fall back until reseeded
+            self.rollups.invalidate()
         d = self.discovery
         if d is None:
             return
@@ -277,6 +287,12 @@ class PrimaryIndex:
         when none attached) — the post-snapshot / post-restore hook."""
         if self.discovery is not None:
             self.discovery.rebuild()
+
+    @_locked
+    def attach_rollups(self, hierarchy) -> None:
+        """Attach a hierarchy.HierarchyIndex so structural rewrites
+        (``_mutated(None)``) invalidate it and compaction notifies it."""
+        self.rollups = hierarchy
 
     # -- MVCC snapshot views (DESIGN.md §12) ----------------------------------
 
@@ -680,6 +696,10 @@ class PrimaryIndex:
         self.mutation_epoch += 1
         if self.discovery is not None:
             self.discovery.rebuild()
+        if self.rollups is not None:
+            # live records are unchanged — the path-keyed rollup mirror
+            # survives compaction by construction; notify for stats
+            self.rollups.note_compaction()
         return dead
 
     # -- checkpoint / restore (DESIGN.md §10.3) -------------------------------
@@ -812,6 +832,21 @@ class PrimaryIndex:
             return None
         return {k: self.columns[k][slot].item()
                 for k in keys if k in self.columns}
+
+    def probe(self, path: str, keys: Sequence[str] = (
+            "type", "size", "atime", "mtime")) -> Optional[
+                Tuple[bool, Dict[str, float]]]:
+        """Liveness-aware point read for the rollup mirror sync:
+        ``None`` if the subject was never indexed, else
+        ``(alive, fields)``. Unlike ``lookup`` it reports tombstoned
+        subjects too (the mirror must REMOVE those), and unlike
+        ``get_record`` it carries liveness."""
+        slot = self.slot_map.get(path)
+        if slot is None:
+            return None
+        fields = {k: self.columns[k][slot].item()
+                  for k in keys if k in self.columns}
+        return bool(self.alive[slot]), fields
 
     def lookup(self, path: str) -> Optional[Dict[str, float]]:
         """Point query: the full record at ``path`` if it is live, else

@@ -45,7 +45,7 @@ class MonitorConfig:
 
 class Monitor:
     def __init__(self, cfg: MonitorConfig, sink: Optional[Callable] = None,
-                 ingestor=None, query_service=None):
+                 ingestor=None, query_service=None, policy=None):
         """``ingestor``: optional event_ingest.EventIngestor (duck-typed —
         anything with ``ingest(batch, names=...)``). When attached, every
         micro-batch this monitor processes is also fed to the dual index,
@@ -59,12 +59,18 @@ class Monitor:
         serving tier's freshness — the served watermark, how far the
         oldest open snapshot trails it, and cache effectiveness — so
         operators see not just how fresh the INDEX is but how fresh the
-        answers being SERVED are (DESIGN.md §12.4)."""
+        answers being SERVED are (DESIGN.md §12.4).
+
+        ``policy``: optional policy.PolicyEngine. When attached, every
+        processed micro-batch triggers one incremental policy sweep at
+        the ingest watermark (the continuous-evaluation loop, DESIGN.md
+        §14.4) and ``run()`` exports the violation counts."""
         self.cfg = cfg
         self.state = hi.init_hierarchy(cfg.max_fids)
         self.sink = sink or (lambda updates, deletes: None)
         self.ingestor = ingestor
         self.query_service = query_service
+        self.policy = policy
         self.metrics = {"events_in": 0, "updates": 0, "deletes": 0,
                         "cancelled": 0, "batches": 0, "stat_calls": 0}
         self._step = jax.jit(self._make_step(), donate_argnums=(0,))
@@ -141,6 +147,12 @@ class Monitor:
             self.metrics[k] += v
         self.metrics["batches"] += 1
         self.sink(out["update_mask"], out["delete_mask"])
+        if self.policy is not None:
+            wm = None
+            if self.ingestor is not None:
+                fr = self.ingestor.freshness()
+                wm = fr.get("applied_seq") if fr else None
+            self.policy.evaluate(watermark=wm)
         return m
 
     def run(self, stream: ev.EventStream, time_budget: Optional[float] = None,
@@ -173,6 +185,16 @@ class Monitor:
             # planner's accelerated queries are exact (or no discovery
             # index attached); nonzero = scans until a rebuild
             out["index_lag"] = fr.get("index_lag", 0)
+            # subtree-rollup freshness (core/hierarchy.py; DESIGN.md
+            # §14): deferred propagation work, and whether du-class
+            # queries are serving from the tree or the scan fallback
+            # (.get defaults: marks predating the rollup layer)
+            out["rollup_dirty"] = fr.get("rollup_dirty", 0)
+            out["rollup_exact"] = fr.get("rollup_exact", False)
+        if self.policy is not None:
+            pf = self.policy.freshness()
+            out["policy_violations"] = pf["violations"]
+            out["policy_sweeps"] = pf["sweeps"]
         if self.query_service is not None:
             sf = self.query_service.freshness()
             out["served_watermark"] = sf["served_watermark"]

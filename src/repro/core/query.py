@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import discovery as disc
+from repro.core import hierarchy as hier
 from repro.core.index import AggregateIndex, PrimaryIndex
 
 _PREDEVAL = None
@@ -66,6 +67,15 @@ PREDICATE_QUERIES = frozenset({
 #: the serving tier folds the resolved clock into their cache keys
 TIME_RELATIVE = frozenset({
     "not_accessed_since", "large_cold_files", "past_retention",
+})
+
+#: queries answered from the subtree-rollup tree (DESIGN.md §14) when
+#: an exact HierarchyIndex is attached, with a brute-force scan over
+#: ``live()`` as the byte-identical fallback. The serving tier folds
+#: the hierarchy's apply epoch into their cache keys — their answers
+#: move with structure changes the primary watermark alone may miss.
+HIER_QUERIES = frozenset({
+    "du", "subtree_summary", "hot_directories",
 })
 
 
@@ -160,6 +170,12 @@ def merge_freshness(marks: Sequence[Dict[str, float]]
         # state (DESIGN.md §11.3; 0 = accelerated queries are exact,
         # also 0 when no discovery index is attached)
         "index_lag": sum(m.get("index_lag", 0) for m in marks),
+        # subtree-rollup health (DESIGN.md §14): deferred propagation
+        # work sums across partitions; the deployment's rollup route is
+        # exact only if EVERY partition's tree is (marks predating the
+        # rollup layer count as inexact, forcing the scan fallback)
+        "rollup_dirty": sum(m.get("rollup_dirty", 0) for m in marks),
+        "rollup_exact": all(m.get("rollup_exact", False) for m in marks),
         "sources": len(marks),
     }
 
@@ -167,7 +183,8 @@ def merge_freshness(marks: Sequence[Dict[str, float]]
 class QueryEngine:
     def __init__(self, primary: PrimaryIndex, aggregate: AggregateIndex,
                  now=None, ingestor=None,
-                 use_kernels: Optional[bool] = None):
+                 use_kernels: Optional[bool] = None,
+                 hierarchy=None):
         """``ingestor``: optional event_ingest.EventIngestor (duck-typed —
         anything with ``freshness()``) whose watermark stamps results. A
         list/tuple of ingestors (e.g. one per MDT feeding a sharded
@@ -188,12 +205,22 @@ class QueryEngine:
         importable; False pins the pure-numpy scan fallback; True
         forces the kernel package even without jax (its numpy host
         oracle — slower than the scan, but it exercises the fallback
-        path end to end)."""
+        path end to end).
+
+        ``hierarchy``: optional hierarchy.HierarchyIndex serving the
+        subtree-rollup queries (``du`` / ``subtree_summary`` /
+        ``hot_directories``). None auto-adopts ``ingestor.hierarchy``
+        when a single ingestor is attached; without one, those queries
+        fall back to the brute-force scan over ``live()``."""
         self.primary = primary
         self.aggregate = aggregate
         self._now = time.time if now is None else now
         self.ingestor = ingestor
         self.use_kernels = use_kernels
+        if hierarchy is None and ingestor is not None \
+                and not isinstance(ingestor, (list, tuple)):
+            hierarchy = getattr(ingestor, "hierarchy", None)
+        self.hierarchy = hierarchy
         #: per-(shard position) device arena cache keyed by mutation
         #: epoch + row count: {si: ((epoch, n), Arena)}. Entries for a
         #: pinned snapshot engine never churn; on a live engine each
@@ -238,6 +265,7 @@ class QueryEngine:
         "owned_by_deleted_users", "past_retention", "directories_over",
         "storage_by_project", "quota_pressure", "most_small_files",
         "per_user_usage", "dir_size_percentile", "top_storage_users",
+        "du", "subtree_summary", "hot_directories",
     })
 
     def query(self, name: str, *args, **kw) -> Dict:
@@ -415,7 +443,9 @@ class QueryEngine:
         specs = [(name, tuple(args), dict(kw)) for name, args, kw in specs]
         for name, _, _ in specs:
             if name not in self.QUERY_METHODS:
-                raise ValueError(f"unknown query {name!r}")
+                raise ValueError(
+                    f"unknown query {name!r}; expected one of "
+                    f"{sorted(self.QUERY_METHODS)}")
         results: List = [None] * len(specs)
         preds_by_i: Dict[int, List] = {}
         batch: List[Tuple[int, List, dict]] = []
@@ -630,6 +660,61 @@ class QueryEngine:
                  if p.startswith("user:")]
         items.sort(key=lambda x: -x[1])
         return items[:k]
+
+    # -- subtree-rollup queries (DESIGN.md §14) -------------------------------
+    #
+    # du-on-any-directory and friends route through the attached
+    # HierarchyIndex when its rollups are exact (bounded lazy
+    # propagation, O(dirty + answer)); otherwise they fall back to a
+    # brute-force scan over ``live()``. Both routes share the
+    # quantization contract (hierarchy.size_bytes_i64 / atime_bucket),
+    # so results are byte-identical — tests/test_rollup.py pins it.
+
+    def _hier_route(self, name: str):
+        """(hierarchy | None, plan) — hierarchy is None on fallback."""
+        h = self.hierarchy
+        if h is None:
+            return None, {"query": name, "route": "scan",
+                          "reason": "no hierarchy index attached"}
+        if not h.exact:
+            return None, {"query": name, "route": "scan",
+                          "reason": "rollups invalidated (bulk load or "
+                                    "compaction without reseed)"}
+        return h, {"query": name, "route": "rollup", "reason": "exact"}
+
+    def du(self, path: str, depth: int = 0) -> Dict:
+        """The paper's flagship admin query at last: aggregate summary
+        statistics for ANY directory — live file count, total bytes
+        (int64-quantized), max mtime — plus per-subdirectory rows down
+        to ``depth`` levels below ``path`` (0 = totals only)."""
+        h, plan = self._hier_route("du")
+        self.last_plan = plan
+        if h is not None:
+            return h.du(path, depth=depth)
+        return hier.du_scan(self.primary.live(), path, depth=depth)
+
+    def subtree_summary(self, path: str) -> Dict:
+        """``du`` totals plus the coarse atime histogram (bucket counts
+        and bytes over hierarchy.ATIME_EDGES_S, anchored at REF_TIME)
+        and the number of distinct directories holding live files —
+        the retention/tiering view a policy rule evaluates against."""
+        h, plan = self._hier_route("subtree_summary")
+        self.last_plan = plan
+        if h is not None:
+            return h.subtree_summary(path)
+        return hier.subtree_summary_scan(self.primary.live(), path)
+
+    def hot_directories(self, k: int = 10, buckets: int = 2) -> List[Dict]:
+        """Top-k directories by own-grain (non-recursive) bytes in the
+        ``buckets`` most-recent atime buckets — "where is the hot data"
+        at directory granularity, REF_TIME-anchored so the ranking is
+        a property of the corpus, not of when you asked."""
+        h, plan = self._hier_route("hot_directories")
+        self.last_plan = plan
+        if h is not None:
+            return h.hot_directories(k=k, buckets=buckets)
+        return hier.hot_directories_scan(self.primary.live(),
+                                         k=k, buckets=buckets)
 
     # -- the full Table I suite, timed (for bench_index_query) ----------------
 

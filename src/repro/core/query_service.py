@@ -48,8 +48,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.index import AggregateIndex
-from repro.core.query import (TIME_RELATIVE, QueryEngine, merge_freshness,
-                              pred_spec)
+from repro.core.query import (HIER_QUERIES, TIME_RELATIVE, QueryEngine,
+                              merge_freshness, pred_spec)
 
 
 def _canon(obj) -> Any:
@@ -143,7 +143,15 @@ class ServiceSnapshot:
     """One pinned read context: the MVCC index view, the watermark
     token it pinned, and a ``QueryEngine`` bound to the frozen state
     (pinned aggregate records, pinned freshness mark). Close it — it is
-    a context manager — to release the pin."""
+    a context manager — to release the pin.
+
+    The rollup queries (query.HIER_QUERIES) read the LIVE hierarchy
+    index against the pinned primary view — the rollup tree is not
+    MVCC-versioned. That is per-query bounded-FORWARD consistency
+    (same as discovery acceleration): the tree reflects the primary
+    state at or ahead of the pinned watermark, never behind it, and
+    the service keys their cache entries on the hierarchy's apply
+    epoch so an advance can never serve a pre-advance answer."""
 
     def __init__(self, service: "QueryService", view, aggregate,
                  watermark: int):
@@ -153,7 +161,8 @@ class ServiceSnapshot:
         self.engine = QueryEngine(
             view, aggregate, now=service._now,
             ingestor=_PinnedFreshness(view.freshness_mark),
-            use_kernels=service._use_kernels)
+            use_kernels=service._use_kernels,
+            hierarchy=service._hierarchy())
         self._closed = False
 
     @property
@@ -245,6 +254,18 @@ class QueryService:
         if isinstance(self.ingestor, (list, tuple)):
             return list(self.ingestor)
         return [self.ingestor]
+
+    def _hierarchy(self):
+        """The live HierarchyIndex serving rollup queries, or None —
+        ``_PinnedFreshness`` stand-ins carry no hierarchy, so snapshot
+        engines must be handed the real one explicitly. Multi-ingestor
+        deployments get None (each partition's tree covers only its
+        shard's namespace slice; merging is future work) — the engines
+        then use the byte-identical scan fallback."""
+        ings = self._ingestors()
+        if len(ings) == 1:
+            return getattr(ings[0], "hierarchy", None)
+        return None
 
     def _freshness_mark(self) -> Optional[Dict]:
         ings = self._ingestors()
@@ -395,6 +416,14 @@ class QueryService:
         if name in TIME_RELATIVE:
             b = self.now_bucket_s
             key += (int(now // b) if b > 0 else now,)
+        if name in HIER_QUERIES:
+            # rollup queries read the LIVE hierarchy tree (see
+            # ServiceSnapshot): its apply epoch joins the key so a
+            # seed/invalidate/op batch that moves the tree without a
+            # mutating primary apply cannot serve a pre-move answer
+            h = self._hierarchy()
+            key += ((int(h.apply_epoch), bool(h.exact))
+                    if h is not None else None,)
         return key
 
     def _execute(self, snap: ServiceSnapshot, name: str, args: Tuple,

@@ -260,6 +260,7 @@ class ShardedPrimaryIndex:
         self.shards: List[PrimaryIndex] = [
             PrimaryIndex(slot_map=slot_map_factory())
             for _ in range(n_shards)]
+        self.rollups = None
         # top-level MVCC write lock (DESIGN.md §12): cross-shard
         # mutations and snapshot pinning serialize here, then take the
         # per-shard locks inside — one consistent order, no deadlock
@@ -477,6 +478,16 @@ class ShardedPrimaryIndex:
         for sh in self.shards:
             sh.rebuild_discovery()
 
+    @_locked
+    def attach_rollups(self, hierarchy) -> None:
+        """Attach ONE hierarchy.HierarchyIndex across all shards: any
+        shard's structural rewrite invalidates it, any shard's
+        compaction notifies it (rollups are namespace-global — the
+        mirror spans shard boundaries by path)."""
+        self.rollups = hierarchy
+        for sh in self.shards:
+            sh.rollups = hierarchy
+
     def slot_stats(self) -> Dict[str, float]:
         """Deployment-wide arena occupancy (per-shard stats summed; the
         dead fraction is over ALL assigned slots)."""
@@ -584,6 +595,13 @@ class ShardedPrimaryIndex:
     def lookup(self, path: str) -> Optional[Dict[str, float]]:
         """Point query: one shard, one slot-map probe."""
         return self.shards[self.shard_of(path)].lookup(path)
+
+    def probe(self, path: str, keys: Sequence[str] = (
+            "type", "size", "atime", "mtime")):
+        """Liveness-aware point read (rollup mirror sync): routed to the
+        owning shard; cross-shard repath migration is invisible here
+        because the route is recomputed per probe."""
+        return self.shards[self.shard_of(path)].probe(path, keys)
 
     def shard_sizes(self) -> np.ndarray:
         """Live record count per shard (balance diagnostics)."""

@@ -179,3 +179,22 @@ def test_float32_size_threshold_boundaries_agree_across_routes():
         assert _size_paths(scan, t, "scan") == want, t
         assert _size_paths(kern, t, "kernel") == want, t
         assert _size_paths(disc, t, "discovery") == want, t
+
+
+def test_unknown_query_errors_list_the_full_allowlist():
+    """Both dispatch doors (``query`` and ``select_many``) reject an
+    unknown name with the SORTED allowlist in the message — and the
+    rollup queries (ISSUE 8) are registered in it, so a caller typo'ing
+    ``du`` discovers the real name from the error itself."""
+    import pytest
+
+    q = QueryEngine(PrimaryIndex(), AggregateIndex(), now=1.7e9)
+    want = str(sorted(q.QUERY_METHODS))
+    for new in ("du", "subtree_summary", "hot_directories"):
+        assert new in q.QUERY_METHODS
+    with pytest.raises(ValueError) as e1:
+        q.query("disk_usage")
+    with pytest.raises(ValueError) as e2:
+        q.select_many([("disk_usage", (), {})])
+    for err in (str(e1.value), str(e2.value)):
+        assert "disk_usage" in err and want in err
