@@ -23,6 +23,7 @@ BENCHES = [
     ("discovery", "benchmarks.bench_discovery"),
     ("predeval", "benchmarks.bench_predeval"),
     ("query_service", "benchmarks.bench_query_service"),
+    ("replication", "benchmarks.bench_replication"),
     ("rollup", "benchmarks.bench_rollup"),
     ("fig3_5_scaling", "benchmarks.bench_scaling"),
     ("table1_queries", "benchmarks.bench_index_query"),

@@ -182,6 +182,21 @@ class EventLog:
         return sum(p.end - self.offsets.get((topic, group, i), p.base)
                    for i, p in enumerate(t.partitions))
 
+    def drop_group(self, topic: str, group: str) -> bool:
+        """Retire a consumer group: remove its committed offsets and any
+        retention hold registered under its name. ``truncate`` floors at
+        the minimum committed offset over every group ever seen, so an
+        abandoned group (a decommissioned read replica, a renamed
+        consumer) would otherwise pin log retention FOREVER — replica
+        teardown (core/replication.py) must call this. Returns True if
+        the group had any broker state to drop."""
+        self._topic(topic)
+        stale = [k for k in self.offsets if k[0] == topic and k[1] == group]
+        for k in stale:
+            del self.offsets[k]
+        held = self.holds.pop((topic, group), None)
+        return bool(stale) or held is not None
+
     # -- retention ------------------------------------------------------------
 
     def set_hold(self, topic: str, holder: str,
@@ -229,12 +244,16 @@ class EventLog:
                    "rr": t._rr}
             for name, t in self.topics.items()
         }
+        # offsets/holds keys serialize as msgpack LISTS, never joined
+        # strings: a topic, group, or holder name containing the old
+        # "|" delimiter corrupted the segment file (load blew up with
+        # "too many values to unpack"); tuples round-trip any name
         atomic_write_blob(path, {
             "topics": data,
-            "offsets": {"|".join(map(str, k)): v
-                        for k, v in self.offsets.items()},
-            "holds": {"|".join(k): {str(p): o for p, o in h.items()}
-                      for k, h in self.holds.items()},
+            "offsets": [[t, g, p, o]
+                        for (t, g, p), o in self.offsets.items()],
+            "holds": [[t, holder, [[p, o] for p, o in h.items()]]
+                      for (t, holder), h in self.holds.items()],
         })
 
     @classmethod
@@ -251,10 +270,21 @@ class EventLog:
                                      entry["base"]):
                 p.records = list(recs)
                 p.base = base
-        for k, v in raw["offsets"].items():
-            topic, group, part = k.split("|")
-            log.offsets[(topic, group, int(part))] = v
-        for k, h in raw.get("holds", {}).items():
-            topic, holder = k.split("|")
-            log.holds[(topic, holder)] = {int(p): o for p, o in h.items()}
+        offsets = raw["offsets"]
+        if isinstance(offsets, dict):        # legacy "|"-joined format
+            for k, v in offsets.items():
+                topic, group, part = k.split("|")
+                log.offsets[(topic, group, int(part))] = v
+        else:
+            for topic, group, part, off in offsets:
+                log.offsets[(topic, group, int(part))] = off
+        holds = raw.get("holds", {})
+        if isinstance(holds, dict):          # legacy "|"-joined format
+            for k, h in holds.items():
+                topic, holder = k.split("|")
+                log.holds[(topic, holder)] = {int(p): o
+                                              for p, o in h.items()}
+        else:
+            for topic, holder, h in holds:
+                log.holds[(topic, holder)] = {int(p): o for p, o in h}
         return log

@@ -204,6 +204,12 @@ class Monitor:
             # answers in flight, 0 when nothing is pinned behind
             out["snapshot_lag"] = sf["snapshot_lag"]
             out["cache_hit_rate"] = sf["cache"]["hit_rate"]
+            # replicated read tier (core/replication.py; DESIGN.md
+            # §15.4): follower count and how far the laggiest follower
+            # trails the leader's applied watermark — 0/0 on a plain
+            # single-node QueryService
+            out["replicas"] = sf.get("replicas", 0)
+            out["replica_lag"] = sf.get("replica_lag", 0)
         return out
 
 

@@ -176,6 +176,12 @@ def merge_freshness(marks: Sequence[Dict[str, float]]
         # rollup layer count as inexact, forcing the scan fallback)
         "rollup_dirty": sum(m.get("rollup_dirty", 0) for m in marks),
         "rollup_exact": all(m.get("rollup_exact", False) for m in marks),
+        # replicated read tier (core/replication.py, DESIGN.md §15):
+        # events applied on the leader but not yet on the laggiest
+        # follower — a deployment's stale-tolerant reads trail by its
+        # WORST replica, so the merge takes the max (0 = no replicas or
+        # all caught up; marks predating replication count as 0)
+        "replica_lag": max(m.get("replica_lag", 0) for m in marks),
         "sources": len(marks),
     }
 

@@ -402,6 +402,20 @@ class QueryService:
         if to_close is not None:
             to_close["snap"].close()
 
+    def detach(self) -> None:
+        """Full teardown: unregister this service's ``on_apply`` hooks
+        from every attached ingestor and release the snapshot pool —
+        the inverse of ``__init__``. A decommissioned serving tier (a
+        read replica being torn down, core/replication.py) must not
+        keep receiving invalidation callbacks from an ingestor that
+        outlives it. Idempotent; the service remains queryable but no
+        longer tracks ingest (callers should drop it)."""
+        for ing in self._ingestors():
+            hooks = getattr(ing, "on_apply", None)
+            if hooks is not None and self._on_apply in hooks:
+                hooks.remove(self._on_apply)
+        self.close()
+
     # -- queries --------------------------------------------------------------
 
     def _cache_key(self, name: str, args: Tuple, kw: Dict,

@@ -1,0 +1,438 @@
+"""Replicated read path: leader log shipping, follower replay,
+read-your-writes routing, and failover (DESIGN.md §15).
+
+The serving tier so far (core/query_service.py) scales readers over ONE
+index replica: every query, however cached, ultimately shares that
+replica's arenas, its snapshot pool, and its invalidation churn. This
+module adds the paper-scale deployment shape — one WRITE leader, N READ
+replicas — built entirely out of pieces the repo already trusts:
+
+- **leader**: a ``DurablePipeline`` exactly as before. Its checkpoints
+  double as the replication transport: each ``checkpoint()`` persists
+  the (index + ingestor + offset-barrier) blob and records the barrier
+  in the group's shipping manifest.
+- **followers**: each replica runs its OWN consumer group against the
+  SAME EventLog topic — bootstrap is ``load_checkpoint`` of the last
+  shipped blob, steady state is barrier-aligned suffix replay
+  (``pump(upto=barrier)`` + ``flush`` at each leader checkpoint
+  barrier, then an unflushed tail pump). Because chunk boundaries are a
+  pure function of event seqs and flush points land exactly where the
+  leader's checkpoints flushed, a follower's record versions are
+  byte-identical to the leader's at every barrier (§15.2) — which is
+  what makes failover promotion an equality, not an approximation.
+- **read-your-writes**: ``ReplicationGroup.produce`` returns a
+  watermark token (the max changelog seq published so far). A client
+  that holds token S is routed only to replicas whose applied watermark
+  has reached S; with no eligible follower the read falls back to the
+  leader (catching the leader up if even IT has not applied S yet).
+  Token-less reads take the bounded-staleness path: any replica,
+  freshest answer that round-robin lands on.
+- **failover**: promote the freshest follower — replay any barriers it
+  has not seen, pump the remaining log tail (no forced flush: the kill
+  position is not a deterministic stream position, and promotion must
+  keep the byte-identity contract an uninterrupted leader would have),
+  rebind its producer routing table, and retire the dead leader's
+  consumer group so it cannot pin log retention
+  (``EventLog.drop_group``).
+
+Replica lag (leader applied seq minus the laggiest follower's) is
+exported through ``freshness()`` and merges deployment-wide via
+``query.merge_freshness`` / ``monitor.Monitor``.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import time
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.eventlog import EventLog
+from repro.core.query_service import QueryService
+from repro.core.stream_pipeline import DurablePipeline
+
+
+class Replica:
+    """One index replica: a (primary, ingestor) pair produced by the
+    group's factory, the ``DurablePipeline`` replaying the shared topic
+    under this replica's own consumer group, and a lazily-built
+    ``QueryService`` serving reads from it.
+
+    ``rid`` 0 is the leader (consumer group = the pipeline default, so
+    single-node checkpoints stay loadable); followers get
+    ``<leader_group>:replica-<rid>`` groups — distinct groups are what
+    let each replica keep its own committed offsets and retention hold
+    on the one shared broker."""
+
+    def __init__(self, rid: int, log: EventLog,
+                 factory: Callable[[], Tuple[Any, Any]], topic: str,
+                 group: str, n_partitions: int, batch_size: int,
+                 service_kw: Optional[Dict] = None):
+        self.rid = int(rid)
+        self.group = group
+        self.primary, self.ingestor = factory()
+        self.pipeline = DurablePipeline(
+            log, self.ingestor, topic=topic, group=group,
+            n_partitions=n_partitions, batch_size=batch_size)
+        self._service_kw = dict(service_kw or {})
+        self._service: Optional[QueryService] = None
+        #: index into ReplicationGroup.barriers: how many leader
+        #: checkpoint barriers this replica has replayed-and-flushed
+        self._synced = 0
+
+    @property
+    def service(self) -> QueryService:
+        """The replica's serving tier (built on first read — a standby
+        follower that only replays never pays for a snapshot pool)."""
+        if self._service is None:
+            self._service = QueryService(
+                self.primary, ingestor=self.ingestor, **self._service_kw)
+        return self._service
+
+    def applied_seq(self) -> int:
+        """The replica's applied watermark — the routing eligibility
+        mark for read-your-writes tokens. Monotone (the ingestor's
+        watermark never regresses), so an eligibility check cannot be
+        invalidated by a concurrent replay."""
+        return int(self.ingestor.watermark.applied_seq)
+
+    def close(self) -> None:
+        """Tear down the serving tier (unhook ``on_apply``, release the
+        snapshot pool). Broker-side state (offsets, hold) is the
+        group's to retire — see ``ReplicationGroup.remove_follower``."""
+        if self._service is not None:
+            self._service.detach()
+            self._service = None
+
+
+class ReplicationGroup:
+    """Leader + followers over one EventLog topic (see module
+    docstring). ``factory`` builds one fresh (primary index, ingestor)
+    pair per replica — every replica must start from the same empty
+    state, so the group owns construction, not the caller."""
+
+    def __init__(self, log: EventLog,
+                 factory: Callable[[], Tuple[Any, Any]],
+                 topic: str = "metadata-events", n_partitions: int = 1,
+                 batch_size: int = 1024, ckpt_dir: Optional[str] = None,
+                 leader_group: str = "index-pipeline",
+                 service_kw: Optional[Dict] = None):
+        self.log = log
+        self.factory = factory
+        self.topic = topic
+        self.n_partitions = int(n_partitions)
+        self.batch_size = int(batch_size)
+        self.ckpt_dir = ckpt_dir
+        self.leader_group = leader_group
+        self.service_kw = dict(service_kw or {})
+        if ckpt_dir is not None:
+            os.makedirs(ckpt_dir, exist_ok=True)
+        self.leader = Replica(0, log, factory, topic, leader_group,
+                              self.n_partitions, self.batch_size,
+                              self.service_kw)
+        self.followers: Dict[int, Replica] = {}
+        self._rids = itertools.count(1)
+        #: the shipping manifest: every leader checkpoint barrier, in
+        #: order (partition -> absolute offset). Followers replay
+        #: barriers they have not flushed at yet — the manifest, not
+        #: wall-clock timing, defines the deterministic flush schedule.
+        self.barriers: List[Dict[int, int]] = []
+        #: latest shipped checkpoint blob + the barrier count at ship
+        #: time (a follower bootstrapping from it starts replay there)
+        self._ckpt_path: Optional[str] = None
+        self._ckpt_barriers = 0
+        #: read-your-writes token source: max changelog seq produced
+        self._max_produced = 0
+        self.metrics = {"checkpoints": 0, "failovers": 0,
+                        "failover_s": 0.0, "followers_added": 0,
+                        "followers_removed": 0}
+
+    # -- write path (leader only) ---------------------------------------------
+
+    def produce(self, batch: Dict[str, np.ndarray],
+                names: Optional[Dict[int, str]] = None) -> int:
+        """Publish one changelog micro-batch through the leader's
+        pipeline; returns the read-your-writes token covering it (the
+        max seq produced so far — a client holding it is guaranteed to
+        see this batch's effects wherever the token routes it)."""
+        self.leader.pipeline.produce(batch, names=names)
+        seqs = np.asarray(batch.get("seq", ()))
+        if seqs.size:
+            self._max_produced = max(self._max_produced,
+                                     int(seqs.max()))
+        return self._max_produced
+
+    @property
+    def token(self) -> int:
+        """The current read-your-writes token (max produced seq)."""
+        return self._max_produced
+
+    def pump(self) -> Dict[str, int]:
+        """One leader consume cycle (followers sync separately, on
+        their own cadence — that asymmetry IS the replication win:
+        follower caches absorb invalidations at sync cadence, not at
+        leader churn cadence)."""
+        return self.leader.pipeline.pump()
+
+    def checkpoint(self) -> Dict[int, int]:
+        """Leader checkpoint + barrier shipping. The blob lands in
+        ``ckpt_dir`` (newest kept, predecessor unlinked — followers
+        bootstrap from the newest anyway) and the barrier joins the
+        manifest for suffix replay."""
+        if self.ckpt_dir is None:
+            raise ValueError("ReplicationGroup needs ckpt_dir to "
+                             "checkpoint (no shipping surface)")
+        path = os.path.join(self.ckpt_dir,
+                            f"ckpt-{len(self.barriers):06d}.bin")
+        barrier = self.leader.pipeline.checkpoint(path)
+        self.barriers.append(dict(barrier))
+        prev = self._ckpt_path
+        self._ckpt_path = path
+        self._ckpt_barriers = len(self.barriers)
+        if prev is not None and prev != path and os.path.exists(prev):
+            os.unlink(prev)
+        self.metrics["checkpoints"] += 1
+        return barrier
+
+    # -- replica lifecycle ----------------------------------------------------
+
+    def add_follower(self) -> Replica:
+        """Attach a new read replica. Bootstrap = load the latest
+        shipped checkpoint (if any) — the follower's consumers then
+        seek to that barrier, so replay starts where the blob's state
+        ends, even if the log truncated everything behind it."""
+        rid = next(self._rids)
+        rep = Replica(rid, self.log, self.factory, self.topic,
+                      f"{self.leader_group}:replica-{rid}",
+                      self.n_partitions, self.batch_size, self.service_kw)
+        if self._ckpt_path is not None:
+            rep.pipeline.load_checkpoint(self._ckpt_path)
+            rep._synced = self._ckpt_barriers
+        self.followers[rid] = rep
+        self.metrics["followers_added"] += 1
+        return rep
+
+    def remove_follower(self, rid: int) -> None:
+        """Decommission a replica: tear down its serving tier AND
+        retire its consumer group from the broker. The second half is
+        load-bearing — a dead replica's committed offsets and retention
+        hold would otherwise floor ``truncate`` forever (the abandoned
+        consumer-group bug, tests/test_eventlog.py)."""
+        rep = self.followers.pop(int(rid))
+        rep.close()
+        self.log.drop_group(self.topic, rep.group)
+
+    # -- follower sync (barrier-aligned suffix replay) ------------------------
+
+    def _sync_replica(self, rep: Replica, drain: bool = False) -> None:
+        """Replay every manifest barrier ``rep`` has not flushed at —
+        ``pump(upto=barrier)`` then ``flush()``, reproducing the
+        leader's exact apply windows — then pump the remaining tail
+        WITHOUT flushing (tail events stay buffered exactly as the
+        leader's are; ``drain=True`` force-drains instead, for final
+        byte-identity comparisons at log end, where the leader drains
+        too). Finally the replica's retention hold advances to its
+        committed offsets: a follower never checkpoints, so without
+        this its bootstrap-position hold would pin log retention at
+        genesis forever."""
+        for bar in self.barriers[rep._synced:]:
+            rep.pipeline.pump(upto=dict(bar))
+            rep.pipeline.flush()
+            rep._synced += 1
+        if drain:
+            rep.pipeline.drain()
+        else:
+            rep.pipeline.pump()
+        committed = {c.partition: self.log.committed(self.topic,
+                                                     rep.group,
+                                                     c.partition)
+                     for c in rep.pipeline.consumers}
+        self.log.set_hold(self.topic, rep.group, committed)
+
+    def sync_followers(self, drain: bool = False) -> None:
+        """One sync round across every follower (the replication
+        heartbeat — call it on whatever cadence the deployment's
+        staleness budget allows)."""
+        for rep in self.followers.values():
+            self._sync_replica(rep, drain=drain)
+
+    # -- failover -------------------------------------------------------------
+
+    def failover(self, drain: bool = False) -> Replica:
+        """Promote the freshest follower to leader (max applied seq,
+        ties to the lowest rid for determinism). The promotee replays
+        any unseen barriers, pumps the log tail (unflushed by default —
+        see ``_sync_replica``; the promoted state is then byte-identical
+        to what the uninterrupted leader's would be at the same stream
+        position), takes over produce routing
+        (``rebind_producer_names``), and the dead leader's consumer
+        group is dropped so it cannot pin retention. Raises with no
+        followers to promote."""
+        if not self.followers:
+            raise ValueError("failover with no followers: the group "
+                             "has no replica to promote")
+        t0 = time.perf_counter()
+        cand = max(self.followers.values(),
+                   key=lambda r: (r.applied_seq(), -r.rid))
+        self._sync_replica(cand, drain=drain)
+        cand.pipeline.rebind_producer_names()
+        dead = self.leader
+        dead.close()
+        self.log.drop_group(self.topic, dead.group)
+        del self.followers[cand.rid]
+        self.leader = cand
+        self.metrics["failovers"] += 1
+        self.metrics["failover_s"] = time.perf_counter() - t0
+        return cand
+
+    def close(self) -> None:
+        """Tear down every replica's serving tier (broker state stays —
+        an orderly shutdown is not a decommission)."""
+        self.leader.close()
+        for rep in self.followers.values():
+            rep.close()
+
+
+class ReplicatedQueryService:
+    """Scatter-gather read front end over a ``ReplicationGroup``
+    (DESIGN.md §15.3).
+
+    Routing contract: a read carrying ``token=S`` (a value returned by
+    ``ReplicationGroup.produce``) is served ONLY by a replica whose
+    applied watermark is at least S — eligible followers round-robin;
+    with none eligible the read falls back to the leader, catching the
+    leader up first if even it has not applied S (pump, then flush if
+    the tail is still buffered — a visibility-over-determinism trade
+    the caller opted into by demanding its own write). Token-less reads
+    (``token=None``) may be served by ANY replica: bounded-staleness
+    reads, the throughput path.
+
+    Single reads route by CACHE AFFINITY, not round-robin: each
+    distinct (query, params) key hashes to one eligible replica, so a
+    dashboard's key set partitions across follower caches — N replicas
+    give N combined cache capacities instead of N cold copies of the
+    same keys, and a key's result is computed once per invalidation
+    cycle fleet-wide rather than once per replica. ``query_many``
+    scatters round-robin instead (its goal is spreading one batch's
+    scan work, not cache reuse)."""
+
+    def __init__(self, group: ReplicationGroup):
+        self.group = group
+        self._rr = itertools.count()
+        self.stats = {"queries": 0, "leader_reads": 0,
+                      "follower_reads": 0, "leader_catchups": 0,
+                      "scatters": 0}
+
+    # -- routing --------------------------------------------------------------
+
+    def _eligible(self, token: Optional[int]) -> List[Replica]:
+        """Followers allowed to serve this token (all of them when no
+        token), in rid order. ``applied_seq`` is monotone, so a replica
+        eligible at check time is still eligible at read time."""
+        reps = sorted(self.group.followers.values(),
+                      key=lambda r: r.rid)
+        if token is None:
+            return reps
+        t = int(token)
+        return [r for r in reps if r.applied_seq() >= t]
+
+    def _catch_up_leader(self, token: int) -> None:
+        """Make the leader itself satisfy ``token`` — it produced the
+        write, so the log has it; pump applies complete buckets, and if
+        the token rides the buffered tail, flush forces it visible."""
+        lead = self.group.leader
+        if lead.applied_seq() >= token:
+            return
+        lead.pipeline.pump()
+        if lead.applied_seq() < token:
+            lead.pipeline.flush()
+        if lead.applied_seq() < token:
+            raise ValueError(
+                f"token {token} is ahead of everything produced "
+                f"(leader applied {lead.applied_seq()} after drain): "
+                "tokens must come from ReplicationGroup.produce")
+        self.stats["leader_catchups"] += 1
+
+    def _route(self, token: Optional[int],
+               affinity: Optional[int] = None) -> Replica:
+        """Pick the serving replica: by cache-affinity hash when given,
+        round-robin otherwise; leader fallback when no follower is
+        eligible. A shrinking/growing eligible set remaps some keys —
+        at worst a cold cache on the new home, never a wrong answer."""
+        elig = self._eligible(token)
+        if elig:
+            pick = next(self._rr) if affinity is None else affinity
+            rep = elig[pick % len(elig)]
+            self.stats["follower_reads"] += 1
+            return rep
+        if token is not None:
+            self._catch_up_leader(int(token))
+        self.stats["leader_reads"] += 1
+        return self.group.leader
+
+    # -- reads ----------------------------------------------------------------
+
+    def query(self, name: str, *args, token: Optional[int] = None,
+              **kw) -> Dict:
+        """One named query (``QueryService.query`` shape) against
+        whichever replica the token admits, routed by cache affinity
+        (see class docstring). The response's freshness carries
+        ``replica`` (who served it) and ``token`` (the served applied
+        watermark — pass it back in to read your own read)."""
+        affinity = zlib.crc32(repr((name, args,
+                                    sorted(kw.items()))).encode())
+        rep = self._route(token, affinity=affinity)
+        out = rep.service.query(name, *args, **kw)
+        out["freshness"]["replica"] = rep.rid
+        out["freshness"]["token"] = rep.applied_seq()
+        self.stats["queries"] += 1
+        return out
+
+    def query_many(self, requests, token: Optional[int] = None) -> List[Dict]:
+        """Scatter-gather: split ``requests`` round-robin across every
+        eligible replica (leader included), run each sub-batch through
+        that replica's fused ``query_batch``, and gather results back
+        into request order. With one eligible replica this degenerates
+        to a plain batch on it."""
+        reps = self._eligible(token)
+        if token is not None and not reps:
+            self._catch_up_leader(int(token))
+        reps = reps + [self.group.leader]
+        shards: List[List[int]] = [[] for _ in reps]
+        start = next(self._rr)
+        for i in range(len(requests)):
+            shards[(start + i) % len(reps)].append(i)
+        out: List[Optional[Dict]] = [None] * len(requests)
+        for rep, idxs in zip(reps, shards):
+            if not idxs:
+                continue
+            got = rep.service.query_batch([requests[i] for i in idxs])
+            for i, res in zip(idxs, got):
+                res["freshness"]["replica"] = rep.rid
+                res["freshness"]["token"] = rep.applied_seq()
+                out[i] = res
+        self.stats["queries"] += len(requests)
+        self.stats["scatters"] += 1
+        return out
+
+    # -- freshness ------------------------------------------------------------
+
+    def freshness(self) -> Dict:
+        """The leader service's freshness extended with the replication
+        marks ``monitor.Monitor`` and ``query.merge_freshness`` export:
+        ``replicas`` (follower count), ``replica_lag`` (leader applied
+        seq minus the laggiest follower's, floored at 0), and the
+        per-replica applied watermarks."""
+        out = self.group.leader.service.freshness()
+        lead_seq = self.group.leader.applied_seq()
+        seqs = {r.rid: r.applied_seq()
+                for r in self.group.followers.values()}
+        out["replicas"] = len(seqs)
+        # floored per follower: a follower that synced from the log
+        # PAST the leader's own apply position is fresh, not negative
+        out["replica_lag"] = max(
+            [max(0, lead_seq - s) for s in seqs.values()], default=0)
+        out["replica_seqs"] = {0: lead_seq, **seqs}
+        return out

@@ -192,12 +192,20 @@ class DurablePipeline:
 
     # -- consume side ---------------------------------------------------------
 
-    def pump(self) -> Dict[str, int]:
+    def pump(self, upto: Optional[Dict[int, int]] = None) -> Dict[str, int]:
         """One consume cycle: drain every partition's pending records,
         merge them (plus any held-back tail) by changelog seq into
         global order, hand the ingestor one chunk per COMPLETE
         seq-aligned bucket, then commit each partition's offsets up to
         the applied watermark.
+
+        ``upto`` (partition -> absolute offset) bounds the poll: no
+        partition reads at or past its offset. Barrier-aligned follower
+        replay (core/replication.py) pumps TO a leader checkpoint
+        barrier and flushes there — the exact stream position the
+        leader's own checkpoint flushed at — which is what keeps a
+        replica's buffered-mode apply windows, and therefore its record
+        versions, byte-identical to the leader's (DESIGN.md §15.2).
 
         Two disciplines make recovery byte-identical to an
         uninterrupted run (DESIGN.md §10.2):
@@ -219,9 +227,14 @@ class DurablePipeline:
         names: Dict[int, str] = {}
         polled: List[Dict[str, np.ndarray]] = []
         for c in self.consumers:
+            limit = None if upto is None \
+                else int(upto.get(c.partition, c.position))
             while True:
                 pos0 = c.position
-                got = c.poll(PAGE)
+                max_n = PAGE if limit is None else min(PAGE, limit - pos0)
+                if max_n <= 0:
+                    break
+                got = c.poll(max_n)
                 for j, r in enumerate(got):
                     cols = {k: np.frombuffer(r["cols"][k], dt)
                             for k, dt in _DTYPES.items()}
@@ -231,7 +244,7 @@ class DurablePipeline:
                     smax = int(cols["seq"].max()) if len(cols["seq"]) else 0
                     self._polled[c.partition].append((pos0 + j + 1, smax))
                     polled.append(cols)
-                if len(got) < PAGE:
+                if len(got) < max_n:
                     break
         self.hook("after_read")
         n_new = sum(len(p["seq"]) for p in polled)
@@ -331,6 +344,17 @@ class DurablePipeline:
         freshness mark (0 once drained + flushed)."""
         return self.log.lag(self.topic_name, self.group)
 
+    def rebind_producer_names(self) -> None:
+        """Reset the producer-side routing table to EXACTLY the
+        ingestor's current fid -> name bindings (and clear any pending
+        publication). Used after a state restore and at failover
+        promotion (core/replication.py): merging restored bindings OVER
+        the old table would leave stale pre-restore entries the
+        checkpoint never knew about, so post-restore produce routing
+        would diverge from a fresh process's routing for those fids."""
+        self._prod_names = dict(self.ingestor._name)
+        self._pending_names = {}
+
     # -- checkpoint / restore -------------------------------------------------
 
     def checkpoint(self, path: str) -> Dict[int, int]:
@@ -399,7 +423,7 @@ class DurablePipeline:
         # producer-side routing table: rebound from the restored name
         # bindings so post-recovery produces keep per-subject partition
         # affinity instead of falling back to '#fid' keys
-        self._prod_names.update(self.ingestor._name)
+        self.rebind_producer_names()
         offsets = {int(k): int(v) for k, v in bar["offsets"].items()}
         self._held = None
         for c in self.consumers:

@@ -1,0 +1,198 @@
+"""EventLog serialization + group-retirement tests (ISSUE 9 satellites).
+
+- Delimiter corruption (confirmed repro): ``save`` used to join
+  offset/hold keys as ``"topic|group|partition"`` strings, so any name
+  containing ``|`` corrupted the segment file — ``load`` blew up with
+  "too many values to unpack". Keys now serialize as msgpack lists;
+  these tests pin the adversarial-name roundtrip and the back-compat
+  read of legacy segment files.
+- ``drop_group``: an abandoned consumer group's committed offsets and
+  retention hold floor ``truncate`` FOREVER; ``drop_group`` retires
+  them so retention proceeds (replica teardown depends on it,
+  core/replication.py).
+- Property sweep: random broker histories — topics with adversarial
+  unicode/delimiter names, produce/consume/commit/hold/truncate —
+  roundtrip ``save``/``load`` to byte-identical broker state.
+"""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.eventlog import EventLog
+from repro.core.index import atomic_write_blob
+
+#: names a real deployment will eventually throw at the broker: the old
+#: "|" join delimiter (once, many times), unicode, spaces, dots
+ADVERSARIAL = ["plain", "with|pipe", "a|b|c", "trailing|", "|leading",
+               "ünïcode-тема", "dir with spaces", "dots.and|bars",
+               "snow☃man"]
+
+
+def _assert_broker_equal(a: EventLog, b: EventLog, ctx="") -> None:
+    """Byte-identical broker state: per-partition record bytes and
+    truncation base, round-robin cursors, committed offsets, holds."""
+    assert set(a.topics) == set(b.topics), ctx
+    for name, t in a.topics.items():
+        t2 = b.topics[name]
+        assert t._rr == t2._rr, (ctx, name)
+        assert len(t.partitions) == len(t2.partitions), (ctx, name)
+        for i, (p, q) in enumerate(zip(t.partitions, t2.partitions)):
+            assert p.base == q.base, (ctx, name, i)
+            assert p.records == q.records, (ctx, name, i)   # raw bytes
+    assert a.offsets == b.offsets, ctx
+    assert a.holds == b.holds, ctx
+
+
+# ---------------------------------------------------------------------------
+# the "|" delimiter bug (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_pipe_delimiter_names_roundtrip(tmp_path):
+    """Topic/group/holder names containing the old join delimiter must
+    survive save/load. Before the fix this corrupted the key encoding:
+    ``"audit|prod|g|1|0".split("|")`` has five fields, and ``load``
+    died with "too many values to unpack"."""
+    log = EventLog()
+    t = log.topic("audit|prod", n_partitions=2)
+    for i in range(8):
+        t.produce({"i": i}, key=i)
+    log.consume("audit|prod", "g|1", 0, max_n=2)
+    log.consume("audit|prod", "g|1", 1, max_n=3)
+    log.set_hold("audit|prod", "ckpt|barrier|holder", {0: 1, 1: 2})
+    p = str(tmp_path / "log.zst")
+    log.save(p)
+    log2 = EventLog.load(p)
+    _assert_broker_equal(log, log2, "pipe-delimiter")
+    assert log2.committed("audit|prod", "g|1", 1) == 3
+    assert log2.holds[("audit|prod", "ckpt|barrier|holder")] == {0: 1, 1: 2}
+
+
+def test_unicode_names_roundtrip(tmp_path):
+    log = EventLog()
+    t = log.topic("тема-🧊", n_partitions=1)
+    for i in range(4):
+        t.produce({"i": i}, key=0)
+    log.consume("тема-🧊", "グループ", 0, max_n=2)
+    p = str(tmp_path / "log.zst")
+    log.save(p)
+    _assert_broker_equal(log, EventLog.load(p), "unicode")
+
+
+def test_legacy_joined_key_segment_still_loads(tmp_path):
+    """Segment files written by the old "|"-joined format (no delimiter
+    in any name, or they'd be corrupt) must keep loading."""
+    import msgpack
+    recs = [msgpack.packb({"i": i}, use_bin_type=True) for i in range(5)]
+    legacy = {
+        "topics": {"evts": {"parts": [recs], "base": [2], "rr": 3}},
+        "offsets": {"evts|pipeline|0": 4},
+        "holds": {"evts|pipeline": {0: 3}},
+    }
+    p = str(tmp_path / "legacy.zst")
+    atomic_write_blob(p, legacy)
+    log = EventLog.load(p)
+    assert log.committed("evts", "pipeline", 0) == 4
+    assert log.holds[("evts", "pipeline")] == {0: 3}
+    assert log.topics["evts"].partitions[0].base == 2
+    # and a re-save round-trips through the NEW format losslessly
+    p2 = str(tmp_path / "resaved.zst")
+    log.save(p2)
+    _assert_broker_equal(log, EventLog.load(p2), "legacy-resave")
+
+
+# ---------------------------------------------------------------------------
+# abandoned-group retention pinning (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_drop_group_releases_offset_pin():
+    """A decommissioned group's committed offsets floor truncation;
+    dropping the group lets retention proceed."""
+    log = EventLog()
+    t = log.topic("t", 1)
+    for i in range(10):
+        t.produce({"i": i}, key=0)
+    log.consume("t", "live", 0, max_n=8)       # commits at 8
+    log.consume("t", "dead", 0, max_n=2)       # commits at 2, then dies
+    assert log.truncate("t") == 2              # clamped at the dead group
+    assert t.partitions[0].base == 2
+    assert log.drop_group("t", "dead") is True
+    assert log.truncate("t") == 6              # now floors at "live"
+    assert t.partitions[0].base == 8
+
+
+def test_drop_group_releases_retention_hold():
+    log = EventLog()
+    t = log.topic("t", 1)
+    for i in range(6):
+        t.produce({"i": i}, key=0)
+    log.consume("t", "live", 0, max_n=6)
+    log.set_hold("t", "replica-9", {0: 0})     # bootstrap-position hold
+    assert log.truncate("t") == 0              # pinned at genesis
+    assert log.drop_group("t", "replica-9") is True
+    assert log.truncate("t") == 6
+    # idempotent: nothing left to drop
+    assert log.drop_group("t", "replica-9") is False
+
+
+def test_drop_group_unknown_topic_raises():
+    log = EventLog()
+    with pytest.raises(ValueError, match="unknown topic"):
+        log.drop_group("nope", "g")
+
+
+# ---------------------------------------------------------------------------
+# property sweep: random histories roundtrip byte-identically (satellite 4)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1 << 30), st.integers(1, 3), st.integers(5, 40))
+def test_random_broker_history_roundtrips(seed, n_topics, n_ops):
+    """Drive a random op history — keyed/keyless produce over
+    adversarial topic names, committed/uncommitted consumes, explicit
+    commits, retention holds, truncations, group drops — then
+    save/load: the reloaded broker must be byte-identical (records,
+    bases, cursors, offsets, holds)."""
+    rng = np.random.default_rng(seed)
+    log = EventLog()
+    topics = [ADVERSARIAL[int(rng.integers(len(ADVERSARIAL)))]
+              + f"#{i}" for i in range(n_topics)]
+    groups = [g + "|grp" for g in ("a", "ü", "b|")]
+    for name in topics:
+        log.topic(name, int(rng.integers(1, 4)))
+    for _ in range(n_ops):
+        tn = topics[int(rng.integers(len(topics)))]
+        t = log.topics[tn]
+        op = rng.random()
+        if op < 0.45:
+            key = int(rng.integers(8)) if rng.random() < 0.5 else None
+            t.produce({"v": int(rng.integers(1 << 16))}, key=key)
+        elif op < 0.70:
+            g = groups[int(rng.integers(len(groups)))]
+            p = int(rng.integers(len(t.partitions)))
+            log.consume(tn, g, p, max_n=int(rng.integers(1, 5)),
+                        commit=bool(rng.random() < 0.7))
+        elif op < 0.80:
+            holder = "hold|" + groups[int(rng.integers(len(groups)))]
+            log.set_hold(tn, holder, {
+                p: int(rng.integers(part.base, part.end + 1))
+                for p, part in enumerate(t.partitions)
+                if rng.random() < 0.8})
+        elif op < 0.90:
+            log.truncate(tn)
+        else:
+            g = groups[int(rng.integers(len(groups)))]
+            log.drop_group(tn, g)
+    import tempfile
+    path = os.path.join(tempfile.mkdtemp(), "log.zst")
+    log.save(path)
+    loaded = EventLog.load(path)
+    _assert_broker_equal(log, loaded, f"seed={seed}")
+    # and the roundtrip is stable: a second hop changes nothing
+    path2 = path + ".2"
+    loaded.save(path2)
+    _assert_broker_equal(loaded, EventLog.load(path2), f"seed={seed} hop2")
+    for p in (path, path2):
+        os.unlink(p)

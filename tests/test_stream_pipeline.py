@@ -374,3 +374,46 @@ def test_log_lag_threaded_into_freshness_and_merge():
     assert merged["log_lag"] == 5
     q = QueryEngine(primary, AggregateIndex(), now=1.7e9, ingestor=ing)
     assert q.query("stat", "/fs/f1")["freshness"]["log_lag"] == 0
+
+
+# ---------------------------------------------------------------------------
+# restore resets producer routing exactly (ISSUE 9 satellite)
+# ---------------------------------------------------------------------------
+
+def test_restore_resets_producer_routing_to_checkpoint_bindings():
+    """Rolling a pipeline back to an earlier checkpoint must leave the
+    producer routing table with EXACTLY the restored bindings. The old
+    ``update`` merge kept post-checkpoint bindings alive, so a produce
+    for such a fid routed by its (stale) name while a fresh process
+    restoring the same checkpoint routed by the ``#fid`` fallback —
+    divergent partition placement for the same event."""
+    import tempfile
+    from repro.core.sharded_index import path_hashes
+    log = EventLog()
+    primary, ing, pipe = _fresh("eager", log, 4)
+    pipe.produce(_create_batch([1, 2, 3]),
+                 names={0: "fs", 1: "f1", 2: "f2", 3: "f3"})
+    pipe.drain()
+    ckpt = os.path.join(tempfile.mkdtemp(), "p.ckpt")
+    pipe.checkpoint(ckpt)
+    # a binding the checkpoint has never seen, whose name routes to a
+    # DIFFERENT partition than the '#fid' fallback a fresh process uses
+    fid, name = next(
+        (f, f"zz{f}")
+        for f in range(50, 200)
+        if int(path_hashes([f"zz{f}"])[0]) % 4
+        != int(path_hashes([f"#{f}"])[0]) % 4)
+    pipe.produce(_create_batch([fid]), names={fid: name})
+    assert pipe._prod_names[fid] == name
+    # roll back: the restored table must match the checkpoint exactly
+    pipe.load_checkpoint(ckpt)
+    assert fid not in pipe._prod_names
+    assert pipe._prod_names == dict(ing._name)
+    assert pipe._pending_names == {}
+    # and post-restore produce places the event where a FRESH process
+    # restoring the same checkpoint would (the '#fid' route)
+    ends_before = [p.end for p in pipe.topic.partitions]
+    pipe.produce(_create_batch([fid]))
+    grew = [i for i, p in enumerate(pipe.topic.partitions)
+            if p.end > ends_before[i]]
+    assert grew == [int(path_hashes([f"#{fid}"])[0]) % 4]
