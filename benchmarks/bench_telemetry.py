@@ -1,0 +1,246 @@
+"""Telemetry overhead + exposition benchmark (ISSUE 10; DESIGN.md §16).
+
+Two claims for the always-on telemetry layer:
+
+1. **Default-on instrumentation is nearly free.** The same workload —
+   a 1M-record changelog ingested through the durable pipeline, then a
+   query-service mix with cache hits and misses — timed under a real
+   ``Telemetry`` handle (default sampling) must cost <= 3% more wall
+   clock than under ``NullTelemetry``. Legs alternate (null, instr,
+   null, instr, ...) and the gate compares min-of-reps, which filters
+   one-sided scheduler noise; a small absolute slack absorbs the timer
+   floor. The gate applies at full size; smoke reports the overhead
+   without gating it (sub-second legs make percentages meaningless).
+
+2. **The traces the overhead pays for actually exist.** A separate
+   tightly-sampled pass must produce at least one completed EVENT trace
+   spanning produce -> pump -> apply -> visible with monotone per-stage
+   offsets, and at least one QUERY trace carrying its route and
+   per-stage timings — and both must come out of all three exposition
+   surfaces: ``snapshot()``, the Prometheus text format, and the
+   bounded JSONL sink. This leg is gated at every size (it is
+   correctness, not performance).
+
+Run:  PYTHONPATH=src python benchmarks/bench_telemetry.py [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+try:                                       # `python benchmarks/bench_X.py`
+    from bench_durable_pipeline import synth_event_batches
+except ModuleNotFoundError:                # `python -m benchmarks.run`
+    from benchmarks.bench_durable_pipeline import synth_event_batches
+from repro.core.event_ingest import EventIngestor, IngestConfig
+from repro.core.eventlog import EventLog
+from repro.core.index import AggregateIndex
+from repro.core.query_service import QueryService
+from repro.core.sharded_index import ShardedPrimaryIndex
+from repro.core.stream_pipeline import DurablePipeline
+from repro.core.telemetry import NullTelemetry, Telemetry, set_default
+from repro.core import snapshot as snap
+
+SMOKE = "--smoke" in sys.argv[1:]
+N_RECORDS = 30_000 if SMOKE else 1_000_000
+N_QUERIES = 300 if SMOKE else 1_500
+BATCH = 2048
+N_SHARDS = 4
+NOW = 1.7e9
+PCFG = snap.PipelineConfig(n_users=32, n_groups=8, n_dirs=64)
+#: min-of-REPS per leg; legs alternate so drift hits both sides (rep-
+#: to-rep noise on a shared host runs several %, well above the true
+#: overhead — min-of-3 filters one-sided inflation on both legs)
+REPS = 3
+#: the paper-posture gate: default-on telemetry costs <= 3% wall clock
+MAX_OVERHEAD = 0.03
+#: timer/allocator noise floor — matters only if legs get very short
+ABS_SLACK_S = 0.10
+
+#: the query-service mix: point-ish routes and scans, VARIANTS
+#: parameterizations each, replayed so the cache both hits and misses
+VARIANTS = 3
+MIX = [
+    ("world_writable", lambda v: ()),
+    ("not_accessed_since", lambda v: ((90 + 30 * v) * 86400,)),
+    ("past_retention", lambda v: ((v + 1) * 365 * 86400,)),
+    ("find_by_glob", lambda v: (f"*/f{1 + v}??",)),
+]
+
+
+def run_workload(tel, batches, names) -> float:
+    """One full leg under ``tel``: pipeline ingest of the corpus, then
+    the query mix through a QueryService. Every constructor takes the
+    handle; the process default is swapped too so the lazily-resolved
+    call sites (index compaction, discovery) see the same handle."""
+    prev = set_default(tel)
+    try:
+        log = EventLog(telemetry=tel)
+        primary = ShardedPrimaryIndex(N_SHARDS, telemetry=tel)
+        ing = EventIngestor(
+            IngestConfig(mode="eager", pad_to=BATCH,
+                         update_aggregates=False),
+            PCFG, primary, AggregateIndex(), names=names, telemetry=tel)
+        pipe = DurablePipeline(log, ing, n_partitions=N_SHARDS,
+                               batch_size=BATCH, telemetry=tel)
+        t0 = time.perf_counter()
+        for k, b in enumerate(batches):
+            pipe.produce(b, names=names if k == 0 else None)
+        pipe.drain()
+        svc = QueryService(primary, AggregateIndex(), now=NOW,
+                           use_kernels=False, telemetry=tel)
+        n_keys = len(MIX) * VARIANTS
+        for i in range(N_QUERIES):
+            m = i % n_keys
+            name, argf = MIX[m % len(MIX)]
+            svc.query(name, *argf(m // len(MIX)))
+        wall = time.perf_counter() - t0
+        svc.close()
+        return wall
+    finally:
+        set_default(prev)
+
+
+def bench_overhead() -> Dict[str, float]:
+    batches, names = synth_event_batches(N_RECORDS, seed=3, batch=BATCH)
+    n_events = sum(len(b["seq"]) for b in batches)
+    print(f"# corpus: {n_events} events, {N_QUERIES} service queries, "
+          f"{REPS} reps per leg (min taken), default sampling")
+    null_s: List[float] = []
+    instr_s: List[float] = []
+    for rep in range(REPS):
+        null_s.append(run_workload(NullTelemetry(), batches, names))
+        instr_s.append(run_workload(Telemetry(), batches, names))
+        print(f"# rep {rep}: null {null_s[-1]:.3f}s, "
+              f"instrumented {instr_s[-1]:.3f}s")
+    base, inst = min(null_s), min(instr_s)
+    return {"events": n_events, "queries": N_QUERIES,
+            "null_s": round(base, 3), "instrumented_s": round(inst, 3),
+            "overhead_pct": round((inst - base) / base * 100, 2)}
+
+
+def bench_traces() -> Dict:
+    """The tightly-sampled exposition pass: small corpus, aggressive
+    sampling, JSONL sink attached — returns everything validate()
+    inspects. Sampling is cranked up here because the DEFAULT rates
+    (1 event trace per 128 produces) are the overhead leg's job; this
+    leg proves the trace plumbing end to end."""
+    tel = Telemetry(event_sample_every=4, query_sample_every=2)
+    sink_path = os.path.join(tempfile.mkdtemp(), "traces.jsonl")
+    tel.open_trace_sink(sink_path, limit=256)
+    prev = set_default(tel)
+    try:
+        batches, names = synth_event_batches(6_000, seed=5, batch=512)
+        log = EventLog(telemetry=tel)
+        primary = ShardedPrimaryIndex(2, telemetry=tel)
+        ing = EventIngestor(
+            IngestConfig(mode="eager", pad_to=512,
+                         update_aggregates=False),
+            PCFG, primary, AggregateIndex(), names=names, telemetry=tel)
+        pipe = DurablePipeline(log, ing, n_partitions=2, batch_size=512,
+                               telemetry=tel)
+        for k, b in enumerate(batches):
+            pipe.produce(b, names=names if k == 0 else None)
+        pipe.drain()
+        svc = QueryService(primary, AggregateIndex(), now=NOW,
+                           use_kernels=False, telemetry=tel)
+        for i in range(12):
+            name, argf = MIX[i % len(MIX)]
+            svc.query(name, *argf(0))
+        svc.close()
+    finally:
+        set_default(prev)
+        tel.close_trace_sink()
+    shot = tel.snapshot(traces=True)
+    prom = tel.render_prometheus()
+    with open(sink_path) as f:
+        jsonl = [json.loads(line) for line in f]
+    os.unlink(sink_path)
+    return {"snapshot": shot, "prometheus": prom, "jsonl": jsonl,
+            "sink_stats": tel.sink_stats}
+
+
+def validate(ov: Dict[str, float], tr: Dict) -> List[str]:
+    fails = []
+    if not SMOKE and ov["overhead_pct"] > MAX_OVERHEAD * 100 and (
+            ov["instrumented_s"] - ov["null_s"]
+            > MAX_OVERHEAD * ov["null_s"] + ABS_SLACK_S):
+        fails.append(
+            f"default-on telemetry should cost <= {MAX_OVERHEAD:.0%} "
+            f"wall clock over NullTelemetry (got {ov['overhead_pct']}%: "
+            f"{ov['instrumented_s']}s vs {ov['null_s']}s)")
+
+    events = tr["snapshot"]["traces"]["events"]
+    queries = tr["snapshot"]["traces"]["queries"]
+    full = [t for t in events
+            if [s for s, _ in t["stages"]] == ["produce", "pump",
+                                               "apply", "visible"]]
+    if not full:
+        fails.append("no event trace spans produce->pump->apply->visible "
+                     f"(got {[[s for s, _ in t['stages']] for t in events]})")
+    for t in full:
+        offs = [o for _, o in t["stages"]]
+        if offs != sorted(offs) or offs[0] != 0.0:
+            fails.append(f"event trace stage offsets not monotone: {offs}")
+        if t["latency_s"] != offs[-1]:
+            fails.append("event trace latency_s should equal the "
+                         "visible-stage offset")
+    routed = [t for t in queries if t.get("route") and t["stages"]]
+    if not routed:
+        fails.append(f"no query trace carries a route ({len(queries)} "
+                     "query traces total)")
+    if not any(t.get("route") == "cache" for t in queries):
+        fails.append("replayed mix should produce at least one "
+                     "cache-routed query trace")
+
+    mets = tr["snapshot"]["metrics"]
+    for name in ("event_visibility_latency_seconds", "query_route_seconds",
+                 "pipeline_produced_events_total", "ingest_events_total",
+                 "service_cache_hits_total", "shard_mutation_records_total"):
+        if name not in mets or not mets[name]["series"]:
+            fails.append(f"snapshot() missing populated family {name!r}")
+    for frag in ("event_visibility_latency_seconds_bucket{le=",
+                 "# TYPE query_route_seconds histogram",
+                 "pipeline_produced_events_total"):
+        if frag not in tr["prometheus"]:
+            fails.append(f"Prometheus exposition missing {frag!r}")
+    if tr["sink_stats"]["written"] != len(tr["jsonl"]) or not tr["jsonl"]:
+        fails.append(f"JSONL sink wrote {tr['sink_stats']['written']} "
+                     f"but file holds {len(tr['jsonl'])} traces")
+    kinds = {t["kind"] for t in tr["jsonl"]}
+    if not {"event", "query"} <= kinds:
+        fails.append(f"JSONL sink should hold both trace kinds, got {kinds}")
+    return fails
+
+
+def main() -> List[str]:
+    ov = bench_overhead()
+    tr = bench_traces()
+    cols = list(ov)
+    print(",".join(cols))
+    print(",".join(str(ov[c]) for c in cols))
+    ev_n = len(tr["snapshot"]["traces"]["events"])
+    q_n = len(tr["snapshot"]["traces"]["queries"])
+    print(f"# exposition pass: {ev_n} event traces, {q_n} query traces, "
+          f"{len(tr['jsonl'])} JSONL lines, "
+          f"{len(tr['prometheus'].splitlines())} Prometheus lines")
+    fails = validate(ov, tr)
+    for f in fails:
+        print("VALIDATION-FAIL:", f)
+    if not fails:
+        gate = ("report-only at smoke size"
+                if SMOKE else f"<= {MAX_OVERHEAD:.0%} gate")
+        print(f"TELEMETRY-VALIDATED: default-on instrumentation costs "
+              f"{ov['overhead_pct']}% over NullTelemetry at "
+              f"{ov['events']} events + {ov['queries']} queries "
+              f"({gate}); event and query traces exported via "
+              "snapshot, Prometheus text, and the bounded JSONL sink")
+    return fails
+
+
+if __name__ == "__main__":
+    sys.exit(1 if main() else 0)

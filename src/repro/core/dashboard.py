@@ -115,13 +115,55 @@ def policy_panel(policy) -> str:
     return "\n".join(out)
 
 
+def telemetry_panel(tel) -> str:
+    """Operational panel over a telemetry.Telemetry handle: the
+    ingest-to-visibility latency histogram's quantiles, per-route query
+    latency, cache effectiveness, and the most recent sampled traces —
+    the at-a-glance form of ``Telemetry.snapshot()``."""
+    snap = tel.snapshot(traces=True)
+    mets = snap["metrics"]
+    out = ["== telemetry =="]
+    vis = mets.get("event_visibility_latency_seconds")
+    if vis and vis["series"]:
+        h = tel.histogram("event_visibility_latency_seconds")
+        out.append(
+            f"  ingest->visible: n={vis['series'][0]['count']} "
+            f"p50<={h.quantile(0.5) * 1e3:.2f}ms "
+            f"p99<={h.quantile(0.99) * 1e3:.2f}ms")
+    routes = mets.get("query_route_seconds")
+    if routes:
+        for s in routes["series"]:
+            if not s["count"]:
+                continue
+            out.append(
+                f"  route {s['labels']['route']:<10s} n={s['count']} "
+                f"mean={s['sum'] / s['count'] * 1e3:.2f}ms")
+    hits = mets.get("service_cache_hits_total")
+    misses = mets.get("service_cache_misses_total")
+    if hits and misses and (hits["series"] or misses["series"]):
+        h_n = sum(s["value"] for s in hits["series"])
+        m_n = sum(s["value"] for s in misses["series"])
+        tot = h_n + m_n
+        out.append(f"  cache: {h_n}/{tot} hits "
+                   f"({h_n / tot * 100 if tot else 0:.0f}%)")
+    for kind in ("events", "queries"):
+        for tr in list(snap["traces"][kind])[-2:]:
+            stages = " ".join(f"{s}={t * 1e3:.2f}ms"
+                              for s, t in tr["stages"])
+            head = (f"event seq={tr['seq']}" if kind == "events"
+                    else f"query {tr['query']} route={tr['route']}")
+            out.append(f"  trace {head}: {stages}")
+    return "\n".join(out)
+
+
 def render_dashboard(primary: PrimaryIndex, agg: AggregateIndex,
                      k: int = 5, now=None, policy=None, hierarchy=None,
-                     du_paths: Sequence[str] = ()) -> str:
-    """``policy`` / ``hierarchy`` / ``du_paths`` are optional add-on
-    panels (all default off — callers predating them render the same
-    dashboard as before): a violation panel per the policy engine, and
-    one ``du_view`` per requested path routed through ``hierarchy``."""
+                     du_paths: Sequence[str] = (), telemetry=None) -> str:
+    """``policy`` / ``hierarchy`` / ``du_paths`` / ``telemetry`` are
+    optional add-on panels (all default off — callers predating them
+    render the same dashboard as before): a violation panel per the
+    policy engine, one ``du_view`` per requested path routed through
+    ``hierarchy``, and the ``telemetry_panel`` scrape summary."""
     parts = [
         f"ICICLE DASHBOARD — {len(primary)} live objects, "
         f"{len(agg)} aggregate principals",
@@ -139,4 +181,6 @@ def render_dashboard(primary: PrimaryIndex, agg: AggregateIndex,
             parts += ["", du_view(q, p)]
     if policy is not None:
         parts += ["", policy_panel(policy)]
+    if telemetry is not None:
+        parts += ["", telemetry_panel(telemetry)]
     return "\n".join(parts)

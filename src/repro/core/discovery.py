@@ -91,6 +91,7 @@ class DiscoveryConfig:
 # exact verify trims) and the vectorized zone pruner are shared with
 # the fused predicate kernel — the kernel package is their canonical
 # home (pure numpy there; no jax at import time)
+from repro.core.telemetry import get_telemetry  # noqa: E402
 from repro.kernels.predeval.ref import (widen_hi as _widen_hi,  # noqa: E402
                                         widen_lo as _widen_lo,
                                         zone_keep)
@@ -489,6 +490,8 @@ class ShardDiscovery:
         candidates only."""
         if self._stale or not self._delta_n:
             return
+        tel = get_telemetry()
+        t0 = tel.clock()
         slots = self.delta_slots()
         self._delta = []
         self._delta_n = 0
@@ -497,6 +500,10 @@ class ShardDiscovery:
                                         self.cfg.chunk_windows))
         self._refresh_zones()
         self.stats["merges"] += 1
+        tel.counter("discovery_merges_total",
+                    "delta folds into immutable runs").inc()
+        tel.histogram("discovery_merge_seconds",
+                      "one delta fold").observe(tel.clock() - t0)
         if len(self.runs) > self.cfg.max_runs:
             self.rebuild()                      # LSM major compaction
 
@@ -504,6 +511,8 @@ class ShardDiscovery:
         """Rebuild from live rows: one run covering every live slot, an
         empty delta, freshness re-armed. Deterministic given the
         arenas — the restore path relies on that (DESIGN.md §11.4)."""
+        tel = get_telemetry()
+        t0 = tel.clock()
         p = self.primary
         n = len(p.slot_map)
         live = np.nonzero(p.alive[:n])[0].astype(np.int64)
@@ -517,6 +526,10 @@ class ShardDiscovery:
         self._synced_epoch = p.mutation_epoch
         self._refresh_zones()
         self.stats["rebuilds"] += 1
+        tel.counter("discovery_rebuilds_total",
+                    "full rebuilds from live rows").inc()
+        tel.histogram("discovery_rebuild_seconds",
+                      "one full rebuild").observe(tel.clock() - t0)
 
     # -- freshness -----------------------------------------------------------
 

@@ -82,6 +82,7 @@ from repro.core.hierarchy import HierarchyIndex, resolve_paths_host
 from repro.core.index import (AggregateIndex, PrimaryIndex, bucket_pow2,
                               pack_array, pad_1d, unpack_array)
 from repro.core.sketches import ddsketch as dds
+from repro.core.telemetry import resolve as _resolve_tel
 
 MODES = ("eager", "buffered")
 
@@ -183,7 +184,8 @@ class EventIngestor:
                  primary: PrimaryIndex, aggregate: AggregateIndex,
                  names: Optional[Dict[int, str]] = None,
                  principal_names: Optional[Sequence[str]] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 telemetry=None):
         """``primary`` may be a monolithic ``PrimaryIndex`` or a
         ``sharded_index.ShardedPrimaryIndex`` — the ingestor only uses
         the shared mutation protocol (upsert_batch / delete_batch /
@@ -217,6 +219,21 @@ class EventIngestor:
                         "applies": 0, "sketch_rows": 0, "unresolved": 0,
                         "reconciles": 0, "repair_upserts": 0,
                         "repair_tombstones": 0}
+        # registry instruments next to (never replacing) self.metrics:
+        # the dict is serialized by state_dict() and byte-compared by the
+        # crash/differential suites, so it stays the durable source of
+        # truth while telemetry is the scrape surface
+        self.telemetry = _resolve_tel(telemetry)
+        self._c_events_in = self.telemetry.counter(
+            "ingest_events_total", "changelog events handed to ingestors")
+        self._h_apply_s = self.telemetry.histogram(
+            "ingest_apply_seconds",
+            "one coalesced apply under the write lock")
+        self._g_applied_seq = self.telemetry.gauge(
+            "ingest_watermark_applied_seq",
+            "highest changelog seq visible to readers")
+        self._g_pending = self.telemetry.gauge(
+            "ingest_pending_events", "buffered events not yet visible")
         # host state-manager tables (fid-keyed)
         self._name: Dict[int, str] = dict(names or {})
         self._parent: Dict[int, int] = {}
@@ -268,6 +285,7 @@ class EventIngestor:
             self._name.update(names)
         n = len(batch["fid"])
         self.metrics["events_in"] += n
+        self._c_events_in.inc(n)
         if n == 0:
             return {"applied": 0, "pending": self.watermark.pending}
         if self.cfg.mode == "eager":
@@ -627,13 +645,18 @@ class EventIngestor:
         h.seed(pairs, self.primary.live())
 
     def _apply(self, batches: List[Dict[str, np.ndarray]]) -> int:
+        t0 = self.telemetry.clock()
         with self._write_lock():
-            return self._apply_inner(batches)
+            n = self._apply_inner(batches)
+        self._h_apply_s.observe(self.telemetry.clock() - t0)
+        return n
 
     def _apply_inner(self, batches: List[Dict[str, np.ndarray]]) -> int:
         b = {k: np.concatenate([np.asarray(bb[k]) for bb in batches])
              for k in batches[0]}
         n_in = len(b["fid"])
+        if self.telemetry.enabled and n_in:
+            self.telemetry.event_stage("apply", int(b["seq"].max()))
 
         facts = self._coalesce(b)
         if facts is None:
@@ -845,6 +868,9 @@ class EventIngestor:
         self.watermark.pending = self._buffered
         self.watermark.last_apply_time = self.clock()
         self.watermark.applied_batches += 1
+        self._g_applied_seq.set(self.watermark.applied_seq)
+        self._g_pending.set(self.watermark.pending)
+        self.telemetry.event_visible(self.watermark.applied_seq)
 
     def _coalesce(self, b: Dict[str, np.ndarray]) -> Optional[Dict]:
         """Rules 1+2 on the host: last event per fid is its representative;

@@ -29,6 +29,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import msgpack
 
+from repro.core.telemetry import NULL_INSTRUMENT, resolve as _resolve_tel
+
 
 def _unpack(raw: bytes) -> Any:
     # int map keys (fid -> name side tables) are legal payloads here
@@ -79,6 +81,9 @@ class Topic:
         self.name = name
         self.partitions = [Partition() for _ in range(n_partitions)]
         self._rr = 0                     # round-robin cursor for keyless produce
+        # bound by EventLog.topic() to the broker's telemetry handle;
+        # a bare Topic (tests) counts into the shared no-op
+        self._produced_c = NULL_INSTRUMENT
 
     def produce(self, payload: Any, key: Optional[int] = None) -> Tuple[int, int]:
         """Append to the partition ``key % n`` — or round-robin when no
@@ -90,6 +95,7 @@ class Topic:
         else:
             p = key % len(self.partitions)
         off = self.partitions[p].append(payload)
+        self._produced_c.inc()
         return p, off
 
     @property
@@ -103,9 +109,13 @@ class Topic:
 class EventLog:
     """Broker: topics + consumer-group offsets (absolute, see Partition)."""
 
-    def __init__(self):
+    def __init__(self, telemetry=None):
+        self.telemetry = _resolve_tel(telemetry)
         self.topics: Dict[str, Topic] = {}
         self.offsets: Dict[Tuple[str, str, int], int] = {}
+        # per-topic labeled children, cached so the hot consume/produce
+        # paths never pay a family lookup
+        self._consumed_c: Dict[str, Any] = {}
         # retention holds: (topic, holder) -> {partition: offset}. A
         # commit-after-apply group's committed offsets acknowledge
         # applies that are durable only at its next CHECKPOINT, so
@@ -115,7 +125,16 @@ class EventLog:
 
     def topic(self, name: str, n_partitions: int = 1) -> Topic:
         if name not in self.topics:
-            self.topics[name] = Topic(name, n_partitions)
+            t = Topic(name, n_partitions)
+            t._produced_c = self.telemetry.counter(
+                "eventlog_produced_records_total",
+                "records appended per topic",
+                labels=("topic",)).labels(name)
+            self._consumed_c[name] = self.telemetry.counter(
+                "eventlog_consumed_records_total",
+                "records read by consumer groups per topic",
+                labels=("topic",)).labels(name)
+            self.topics[name] = t
         return self.topics[name]
 
     def _topic(self, name: str) -> Topic:
@@ -152,6 +171,8 @@ class EventLog:
         key = (topic, group, partition)
         off = self.offsets.get(key, p.base) if offset is None else offset
         recs = p.read(off, max_n)
+        if recs:
+            self._consumed_c.get(topic, NULL_INSTRUMENT).inc(len(recs))
         if commit:
             # never move a commit backwards: peeking at history with an
             # explicit offset must not re-open acknowledged records
@@ -229,6 +250,11 @@ class EventLog:
             floor = min(floors) if floors else p.base
             want = floor if barrier is None else min(barrier.get(i, 0), floor)
             dropped += p.truncate(want)
+        if dropped:
+            self.telemetry.counter(
+                "eventlog_truncated_records_total",
+                "records retired behind checkpoint barriers per topic",
+                labels=("topic",)).labels(topic).inc(dropped)
         return dropped
 
     # -- persistence (crash recovery) ----------------------------------------

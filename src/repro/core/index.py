@@ -40,6 +40,7 @@ import numpy as np
 from repro.compat import zstd
 from repro.core import metadata as md
 from repro.core.sketches import ddsketch as dds
+from repro.core.telemetry import get_telemetry
 
 
 def atomic_write_blob(path: str, obj, pre_replace: Optional[Callable] = None
@@ -462,6 +463,14 @@ class PrimaryIndex:
             cap *= 2
         if cap == cur:
             return
+        # PrimaryIndex is a serialized dataclass, so it carries no
+        # telemetry field — growth/compaction are cold paths and read
+        # the process default lazily
+        tel = get_telemetry()
+        tel.counter("index_arena_growth_total",
+                    "arena doubling events").inc()
+        tel.counter("index_arena_grown_rows_total",
+                    "rows of fresh arena capacity allocated").inc(cap - cur)
         self.paths = np.concatenate(
             [self.paths, np.empty(cap - cur, object)])
         self.version = np.concatenate(
@@ -667,6 +676,8 @@ class PrimaryIndex:
         dead = n - len(live_slots)
         if dead == 0:
             return 0
+        tel = get_telemetry()
+        t0 = tel.clock()
         dead_vers = self.version[:n][~self.alive[:n]]
         self.tombstone_floor = max(self.tombstone_floor,
                                    int(dead_vers.max()))
@@ -700,6 +711,10 @@ class PrimaryIndex:
             # live records are unchanged — the path-keyed rollup mirror
             # survives compaction by construction; notify for stats
             self.rollups.note_compaction()
+        tel.histogram("index_compact_seconds",
+                      "one arena compaction").observe(tel.clock() - t0)
+        tel.counter("index_compact_reclaimed_slots_total",
+                    "tombstoned slots reclaimed by compaction").inc(dead)
         return dead
 
     # -- checkpoint / restore (DESIGN.md §10.3) -------------------------------

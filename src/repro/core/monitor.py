@@ -18,7 +18,9 @@ dominates. One Monitor per MDT/fileset; `MonitorPool` fans out.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
+from collections.abc import MutableMapping
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -28,6 +30,44 @@ import numpy as np
 from repro.core import events as ev
 from repro.core import hierarchy as hi
 from repro.core import reduction
+from repro.core.telemetry import resolve as _resolve_tel
+
+
+class MetricsView(MutableMapping):
+    """Dict-shaped compatibility view over registry counters (DESIGN.md
+    §16). The internal plain dict stays the exact source of truth —
+    item access, iteration, equality, and ``**`` unpacking behave
+    exactly like the dict they replaced — while every positive
+    increment mirrors into a labeled counter family, so the scrape
+    surface sees per-monitor throughput without any caller changing."""
+
+    __slots__ = ("_d", "_fam", "_label")
+
+    def __init__(self, initial: Dict, family, label: str):
+        self._d = dict(initial)
+        self._fam = family
+        self._label = label
+
+    def __getitem__(self, k):
+        return self._d[k]
+
+    def __setitem__(self, k, v) -> None:
+        delta = v - self._d.get(k, 0)
+        self._d[k] = v
+        if delta > 0:
+            self._fam.labels(self._label, k).inc(delta)
+
+    def __delitem__(self, k) -> None:
+        del self._d[k]
+
+    def __iter__(self):
+        return iter(self._d)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __repr__(self) -> str:
+        return repr(self._d)
 
 
 @dataclasses.dataclass
@@ -44,8 +84,12 @@ class MonitorConfig:
 
 
 class Monitor:
+    #: per-process instance ordinals labeling each monitor's counters
+    _ids = itertools.count()
+
     def __init__(self, cfg: MonitorConfig, sink: Optional[Callable] = None,
-                 ingestor=None, query_service=None, policy=None):
+                 ingestor=None, query_service=None, policy=None,
+                 telemetry=None):
         """``ingestor``: optional event_ingest.EventIngestor (duck-typed —
         anything with ``ingest(batch, names=...)``). When attached, every
         micro-batch this monitor processes is also fed to the dual index,
@@ -71,8 +115,18 @@ class Monitor:
         self.ingestor = ingestor
         self.query_service = query_service
         self.policy = policy
-        self.metrics = {"events_in": 0, "updates": 0, "deletes": 0,
-                        "cancelled": 0, "batches": 0, "stat_calls": 0}
+        self.telemetry = _resolve_tel(telemetry)
+        # registry-backed counters behind the legacy dict shape
+        # (ISSUE 10 satellite: existing tests/benches read the dict
+        # unchanged; the scrape surface reads the labeled family)
+        self.metrics = MetricsView(
+            {"events_in": 0, "updates": 0, "deletes": 0,
+             "cancelled": 0, "batches": 0, "stat_calls": 0},
+            self.telemetry.counter(
+                "monitor_events_total",
+                "per-monitor processing counters",
+                labels=("monitor", "metric")),
+            str(next(Monitor._ids)))
         self._step = jax.jit(self._make_step(), donate_argnums=(0,))
 
     def _make_step(self):
@@ -223,12 +277,19 @@ class MonitorPool:
     MIN watermark over partitions (query.merge_freshness): a reader is
     only as fresh as the stalest partition behind it (DESIGN.md §8)."""
 
-    def __init__(self, n: int, cfg: MonitorConfig, ingestors=None):
+    def __init__(self, n: int, cfg: MonitorConfig, ingestors=None,
+                 telemetry=None):
         assert ingestors is None or len(ingestors) == n
         self.ingestors = ingestors
+        self.telemetry = _resolve_tel(telemetry)
         self.monitors = [
-            Monitor(cfg, ingestor=ingestors[i] if ingestors else None)
+            Monitor(cfg, ingestor=ingestors[i] if ingestors else None,
+                    telemetry=self.telemetry)
             for i in range(n)]
+        self._c_events = self.telemetry.counter(
+            "monitor_pool_events_total", "events drained by pool runs")
+        self._h_run_s = self.telemetry.histogram(
+            "monitor_pool_run_seconds", "one pool drain across partitions")
 
     def freshness(self) -> Optional[Dict[str, float]]:
         """Min-merged watermark over the pool's partitions (None when no
@@ -246,6 +307,8 @@ class MonitorPool:
             r = mon.run(s)
             total += r["events"]
         dt = time.perf_counter() - t0
+        self._c_events.inc(total)
+        self._h_run_s.observe(dt)
         out = {"events": total, "seconds": dt,
                "events_per_s": total / max(dt, 1e-9)}
         fr = self.freshness()

@@ -41,6 +41,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core import hierarchy as hier
+from repro.core.telemetry import resolve as _resolve_tel
 
 RULE_KINDS = ("max_bytes", "retention", "uid_quota")
 
@@ -91,7 +92,7 @@ class PolicyEngine:
     the rollup tree uses."""
 
     def __init__(self, rules, hierarchy=None, aggregate=None,
-                 primary=None, max_events: int = 1024):
+                 primary=None, max_events: int = 1024, telemetry=None):
         rules = list(rules)
         names = [r.name for r in rules]
         if len(set(names)) != len(names):
@@ -109,6 +110,14 @@ class PolicyEngine:
         self._last_watermark: Optional[int] = None
         self.stats = {"sweeps": 0, "evaluated": 0, "skipped": 0,
                       "enter": 0, "exit": 0}
+        self.telemetry = _resolve_tel(telemetry)
+        self._h_sweep_s = self.telemetry.histogram(
+            "policy_sweep_seconds", "one incremental evaluate() sweep")
+        self._g_violations = self.telemetry.gauge(
+            "policy_violations_active", "rules currently in violation")
+        self._c_edges = self.telemetry.counter(
+            "policy_edges_total", "violation enter/exit transitions",
+            labels=("edge",))
 
     # -- evaluation -----------------------------------------------------------
 
@@ -183,6 +192,7 @@ class PolicyEngine:
         ``watermark`` is any monotone token of applied ingest state
         (e.g. ``freshness()['applied_seq']``); None disables the
         uid-rule gate (they re-evaluate every sweep)."""
+        t0 = self.telemetry.clock()
         with self._lock:
             out: List[Dict] = []
             wm = None if watermark is None else int(watermark)
@@ -212,9 +222,12 @@ class PolicyEngine:
                           "detail": detail}
                     self.events.append(ev)
                     self.stats[edge] += 1
+                    self._c_edges.labels(edge).inc()
                     out.append(ev)
             self._last_watermark = wm
             self.stats["sweeps"] += 1
+            self._g_violations.set(len(self.active))
+            self._h_sweep_s.observe(self.telemetry.clock() - t0)
             return out
 
     def violations(self) -> Dict[str, Dict]:

@@ -33,6 +33,7 @@ import numpy as np
 from repro.core import discovery as disc
 from repro.core import hierarchy as hier
 from repro.core.index import AggregateIndex, PrimaryIndex
+from repro.core.telemetry import resolve as _resolve_tel
 
 _PREDEVAL = None
 
@@ -155,9 +156,14 @@ def merge_freshness(marks: Sequence[Dict[str, float]]
         return None
     return {
         "mode": "+".join(sorted({str(m.get("mode")) for m in marks})),
-        "applied_seq": min(m["applied_seq"] for m in marks),
-        "pending_events": sum(m["pending_events"] for m in marks),
-        "staleness_s": max(m["staleness_s"] for m in marks),
+        # the required trio defaults like every later key: a mark from a
+        # layer that only exports lag fields (e.g. a policy engine or a
+        # bare replication tier) must degrade the merge, not KeyError it.
+        # Missing applied_seq pins the deployment watermark at 0 — the
+        # conservative "I can't vouch for anything newer" reading
+        "applied_seq": min(m.get("applied_seq", 0) for m in marks),
+        "pending_events": sum(m.get("pending_events", 0) for m in marks),
+        "staleness_s": max(m.get("staleness_s", 0.0) for m in marks),
         "applied_batches": sum(m.get("applied_batches", 0) for m in marks),
         # a deployment is only as reconciled as its LEAST-recently
         # reconciled partition (0.0 = some partition never was)
@@ -190,7 +196,7 @@ class QueryEngine:
     def __init__(self, primary: PrimaryIndex, aggregate: AggregateIndex,
                  now=None, ingestor=None,
                  use_kernels: Optional[bool] = None,
-                 hierarchy=None):
+                 hierarchy=None, telemetry=None):
         """``ingestor``: optional event_ingest.EventIngestor (duck-typed —
         anything with ``freshness()``) whose watermark stamps results. A
         list/tuple of ingestors (e.g. one per MDT feeding a sharded
@@ -238,6 +244,17 @@ class QueryEngine:
         # engine (the serving tier admits N at once) must not observe
         # each other's routing decisions
         self._plan_tls = threading.local()
+        # route-cascade instruments, families bound once (labels() on a
+        # hot path is one dict hit)
+        self.telemetry = _resolve_tel(telemetry)
+        self._h_route_s = self.telemetry.histogram(
+            "query_route_seconds",
+            "predicate-query latency by chosen route",
+            labels=("route",))
+        self._c_fallback = self.telemetry.counter(
+            "query_discovery_fallback_total",
+            "planner declines by reason",
+            labels=("reason",))
 
     @property
     def now(self) -> float:
@@ -316,8 +333,10 @@ class QueryEngine:
         """(shard discovery list, reason) — list is None on fallback."""
         ds = disc.discovery_shards(self.primary)
         if ds is None:
+            self._c_fallback.labels("unattached").inc()
             return None, "no discovery index attached"
         if not all(d.fresh for d in ds):
+            self._c_fallback.labels("stale").inc()
             return None, "discovery index stale (pending rebuild)"
         return ds, "fresh"
 
@@ -429,8 +448,15 @@ class QueryEngine:
         """Full route cascade for an already-built predicate list (the
         Table-I methods and the serving tier's time-pinned execution
         both land here)."""
+        t0 = self.telemetry.clock()
         got = self._plan_select(qname, preds)
-        return got if got is not None else self._scan_select(preds)
+        if got is None:
+            got = self._scan_select(preds)
+        plan = self.last_plan or {}
+        route = (plan.get("route", "scan")
+                 if plan.get("query") == qname else "scan")
+        self._h_route_s.labels(route).observe(self.telemetry.clock() - t0)
+        return got
 
     def select_many(self, specs: Sequence, now: Optional[float] = None
                     ) -> List:

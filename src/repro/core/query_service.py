@@ -50,6 +50,7 @@ import numpy as np
 from repro.core.index import AggregateIndex
 from repro.core.query import (HIER_QUERIES, TIME_RELATIVE, QueryEngine,
                               merge_freshness, pred_spec)
+from repro.core.telemetry import resolve as _resolve_tel
 
 
 def _canon(obj) -> Any:
@@ -162,7 +163,8 @@ class ServiceSnapshot:
             view, aggregate, now=service._now,
             ingestor=_PinnedFreshness(view.freshness_mark),
             use_kernels=service._use_kernels,
-            hierarchy=service._hierarchy())
+            hierarchy=service._hierarchy(),
+            telemetry=service.telemetry)
         self._closed = False
 
     @property
@@ -200,7 +202,8 @@ class QueryService:
     def __init__(self, primary, aggregate: Optional[AggregateIndex] = None,
                  ingestor=None, now=None, max_readers: int = 16,
                  cache_capacity: int = 256, pin_aggregate: bool = True,
-                 now_bucket_s: float = 1.0, use_kernels=None):
+                 now_bucket_s: float = 1.0, use_kernels=None,
+                 telemetry=None):
         """``now_bucket_s``: freshness bucket for TIME-RELATIVE query
         caching (``not_accessed_since`` / ``large_cold_files`` /
         ``past_retention``). Their cutoffs derive from the wall clock,
@@ -241,6 +244,20 @@ class QueryService:
         self.stats = {"queries": 0, "pages": 0, "snapshots": 0,
                       "cursors_opened": 0, "cursors_closed": 0,
                       "coalesced": 0, "batches": 0}
+        self.telemetry = _resolve_tel(telemetry)
+        self._c_hits = self.telemetry.counter(
+            "service_cache_hits_total", "result-cache hits")
+        self._c_misses = self.telemetry.counter(
+            "service_cache_misses_total", "result-cache misses (computed)")
+        self._c_coalesced = self.telemetry.counter(
+            "service_coalesced_total",
+            "readers that waited on another reader's identical miss")
+        self._g_pins = self.telemetry.gauge(
+            "service_snapshot_pins", "open caller-held snapshot pins")
+        self._h_query_s = self.telemetry.histogram(
+            "service_query_seconds",
+            "end-to-end query() latency by query name",
+            labels=("query",))
         for ing in self._ingestors():
             hooks = getattr(ing, "on_apply", None)
             if hooks is not None:
@@ -337,6 +354,7 @@ class QueryService:
                 self._open_tokens[token] = \
                     self._open_tokens.get(token, 0) + 1
                 self.stats["snapshots"] += 1
+                self._g_pins.set(sum(self._open_tokens.values()))
         return ServiceSnapshot(self, view, agg, token)
 
     def _snapshot_closed(self, token: int) -> None:
@@ -346,6 +364,7 @@ class QueryService:
                 self._open_tokens[token] = left
             else:
                 self._open_tokens.pop(token, None)
+            self._g_pins.set(sum(self._open_tokens.values()))
 
     # -- the snapshot pool ----------------------------------------------------
 
@@ -473,6 +492,7 @@ class QueryService:
             with self._lock:
                 got = self.cache.get(key)
                 if got is not ResultCache._MISS:
+                    self._c_hits.inc()
                     return got, True
                 ev = self._inflight.get(key)
                 if ev is None:
@@ -480,10 +500,12 @@ class QueryService:
                     self._inflight[key] = ev
                     break               # this thread computes
                 self.stats["coalesced"] += 1
+                self._c_coalesced.inc()
             ev.wait()                   # computer fills the cache (or
             #                             fails; loop re-elects)
         try:
             result = self._execute(snap, name, args, kw, now)
+            self._c_misses.inc()
             with self._lock:
                 self.cache.put(key, result)
             return result, False
@@ -497,18 +519,39 @@ class QueryService:
         the current data version, through the result cache. Returns the
         ``QueryEngine.query`` shape with the snapshot's watermark token
         and cache verdict added to the freshness mark."""
+        tel = self.telemetry
+        qt = tel.trace_query(name)
+        t0 = tel.clock()
         with self._sem:
             entry = self._acquire_pooled()
             snap = entry["snap"]
+            if qt is not None:
+                qt.stage("acquire_snapshot")
             try:
                 result, cached = self._run_cached(snap, name, args, kw)
             finally:
                 self._release_pooled(entry)
+        if qt is not None:
+            qt.stage("execute")
         with self._lock:
             self.stats["queries"] += 1
         fresh = dict(snap.engine.freshness() or {})
         fresh["watermark"] = snap.watermark
         fresh["cached"] = cached
+        self._h_query_s.labels(name).observe(tel.clock() - t0)
+        if qt is not None:
+            # the engine's thread-local plan is this thread's routing
+            # record for the query just run (absent on cache hits and
+            # non-plannable queries)
+            plan = snap.engine.last_plan or {}
+            if cached:
+                route = "cache"
+            elif plan.get("query") == name:
+                route = plan.get("route", "direct")
+            else:
+                route = "direct"
+            qt.finish(route=route, cached=cached,
+                      candidates=plan.get("candidates"))
         return {"result": result, "freshness": fresh}
 
     def query_batch(self, requests) -> List[Dict]:

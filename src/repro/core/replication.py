@@ -52,6 +52,7 @@ import numpy as np
 from repro.core.eventlog import EventLog
 from repro.core.query_service import QueryService
 from repro.core.stream_pipeline import DurablePipeline
+from repro.core.telemetry import resolve as _resolve_tel
 
 
 class Replica:
@@ -118,7 +119,8 @@ class ReplicationGroup:
                  topic: str = "metadata-events", n_partitions: int = 1,
                  batch_size: int = 1024, ckpt_dir: Optional[str] = None,
                  leader_group: str = "index-pipeline",
-                 service_kw: Optional[Dict] = None):
+                 service_kw: Optional[Dict] = None,
+                 telemetry=None):
         self.log = log
         self.factory = factory
         self.topic = topic
@@ -148,6 +150,20 @@ class ReplicationGroup:
         self.metrics = {"checkpoints": 0, "failovers": 0,
                         "failover_s": 0.0, "followers_added": 0,
                         "followers_removed": 0}
+        self.telemetry = _resolve_tel(telemetry)
+        self._h_sync_s = self.telemetry.histogram(
+            "replication_sync_seconds", "one follower sync round-trip")
+        self._g_lag = self.telemetry.gauge(
+            "replication_replica_lag",
+            "leader applied seq minus replica applied seq",
+            labels=("replica",))
+        self._c_failovers = self.telemetry.counter(
+            "replication_failovers_total", "leader promotions")
+        self._h_failover_s = self.telemetry.histogram(
+            "replication_failover_seconds", "one failover promotion")
+        self._c_ckpts = self.telemetry.counter(
+            "replication_checkpoints_total",
+            "leader checkpoints shipped to the manifest")
 
     # -- write path (leader only) ---------------------------------------------
 
@@ -194,6 +210,7 @@ class ReplicationGroup:
         if prev is not None and prev != path and os.path.exists(prev):
             os.unlink(prev)
         self.metrics["checkpoints"] += 1
+        self._c_ckpts.inc()
         return barrier
 
     # -- replica lifecycle ----------------------------------------------------
@@ -237,6 +254,7 @@ class ReplicationGroup:
         committed offsets: a follower never checkpoints, so without
         this its bootstrap-position hold would pin log retention at
         genesis forever."""
+        t0 = self.telemetry.clock()
         for bar in self.barriers[rep._synced:]:
             rep.pipeline.pump(upto=dict(bar))
             rep.pipeline.flush()
@@ -250,6 +268,9 @@ class ReplicationGroup:
                                                      c.partition)
                      for c in rep.pipeline.consumers}
         self.log.set_hold(self.topic, rep.group, committed)
+        self._h_sync_s.observe(self.telemetry.clock() - t0)
+        self._g_lag.labels(str(rep.rid)).set(
+            max(0, self.leader.applied_seq() - rep.applied_seq()))
 
     def sync_followers(self, drain: bool = False) -> None:
         """One sync round across every follower (the replication
@@ -285,6 +306,8 @@ class ReplicationGroup:
         self.leader = cand
         self.metrics["failovers"] += 1
         self.metrics["failover_s"] = time.perf_counter() - t0
+        self._c_failovers.inc()
+        self._h_failover_s.observe(self.metrics["failover_s"])
         return cand
 
     def close(self) -> None:

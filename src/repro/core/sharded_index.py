@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core import metadata as md
 from repro.core.index import PrimaryIndex, _locked
+from repro.core.telemetry import resolve as _resolve_tel
 
 # modular inverse of the FNV prime mod 2^32: lets the vectorized hash
 # process fixed-width zero-padded rows unmasked (a trailing zero byte
@@ -247,7 +248,8 @@ class ShardedPrimaryIndex:
     """
 
     def __init__(self, n_shards: int = 4, kernel_route_min: int = 4096,
-                 route_width: int = 192, slot_map_factory=None):
+                 route_width: int = 192, slot_map_factory=None,
+                 telemetry=None):
         assert n_shards >= 1
         if slot_map_factory is None:
             from repro.core.index import DictSlotMap
@@ -261,6 +263,20 @@ class ShardedPrimaryIndex:
             PrimaryIndex(slot_map=slot_map_factory())
             for _ in range(n_shards)]
         self.rollups = None
+        # per-shard routed-record counters, bound once: the mutation
+        # loops run per shard already, so the only extra cost per apply
+        # is one inc per non-empty shard slice
+        self.telemetry = _resolve_tel(telemetry)
+        fam = self.telemetry.counter(
+            "shard_mutation_records_total",
+            "records routed to each shard by mutation kind",
+            labels=("shard", "op"))
+        self._c_ingest = [fam.labels(str(s), "ingest")
+                          for s in range(n_shards)]
+        self._c_upsert = [fam.labels(str(s), "upsert")
+                          for s in range(n_shards)]
+        self._c_delete = [fam.labels(str(s), "delete")
+                          for s in range(n_shards)]
         # top-level MVCC write lock (DESIGN.md §12): cross-shard
         # mutations and snapshot pinning serialize here, then take the
         # per-shard locks inside — one consistent order, no deadlock
@@ -372,6 +388,7 @@ class ShardedPrimaryIndex:
                 n_new += self.shards[s].ingest_columns(
                     files.paths[rows], cols, version, rows=rows,
                     hashes=ph[rows])
+                self._c_ingest[s].inc(hi - lo)
         return n_new
 
     @_locked
@@ -432,6 +449,7 @@ class ShardedPrimaryIndex:
                 paths_o[lo:hi],
                 {k: v[lo:hi] for k, v in fields_o.items()},
                 vers_o[lo:hi], hashes=h_o[lo:hi])
+            self._c_upsert[s].inc(hi - lo)
         return out
 
     @_locked
@@ -455,6 +473,7 @@ class ShardedPrimaryIndex:
                 continue
             out[order[lo:hi]] = self.shards[s].delete_batch(
                 paths_o[lo:hi], vers_o[lo:hi], hashes=h_o[lo:hi])
+            self._c_delete[s].inc(hi - lo)
         return out
 
     @_locked

@@ -39,6 +39,7 @@ that point.
 """
 from __future__ import annotations
 
+import os
 from collections import deque
 from typing import Callable, Dict, List, Optional
 
@@ -49,6 +50,8 @@ from repro.core.discovery import rebuild_discovery
 from repro.core.eventlog import EventLog
 from repro.core.index import atomic_write_blob, read_blob
 from repro.core.sharded_index import path_hashes
+from repro.core.telemetry import (DEFAULT_SIZE_BUCKETS,
+                                  resolve as _resolve_tel)
 
 #: canonical event-batch column dtypes (events.empty_batch layout) —
 #: payloads serialize columns as raw bytes against this schema
@@ -99,9 +102,31 @@ class DurablePipeline:
     def __init__(self, log: EventLog, ingestor, topic: str = "metadata-events",
                  group: str = "index-pipeline", n_partitions: int = 1,
                  batch_size: int = 1024,
-                 hook: Optional[Callable[[str], None]] = None):
+                 hook: Optional[Callable[[str], None]] = None,
+                 telemetry=None):
         self.log = log
         self.ingestor = ingestor
+        self.telemetry = _resolve_tel(telemetry)
+        tel = self.telemetry
+        self._c_produced = tel.counter(
+            "pipeline_produced_events_total",
+            "changelog events published into the topic",
+            labels=("group",)).labels(group)
+        self._c_read = tel.counter(
+            "pipeline_read_events_total",
+            "changelog events polled from the topic",
+            labels=("group",)).labels(group)
+        self._g_commit_lag = tel.gauge(
+            "pipeline_commit_lag_records",
+            "log records produced but not committed by this group "
+            "(refreshed per pump)", labels=("group",)).labels(group)
+        self._h_ckpt_s = tel.histogram(
+            "pipeline_checkpoint_seconds",
+            "wall time of one checkpoint (pump+flush+persist+truncate)",
+            labels=("group",)).labels(group)
+        self._h_ckpt_bytes = tel.histogram(
+            "pipeline_checkpoint_bytes", "size of the checkpoint blob",
+            buckets=DEFAULT_SIZE_BUCKETS, labels=("group",)).labels(group)
         self.topic_name = topic
         self.group = group
         self.topic = log.topic(topic, n_partitions)
@@ -188,6 +213,10 @@ class DurablePipeline:
             first = False
             self.topic.produce(payload, key=p)
         self.metrics["produced"] += n
+        self._c_produced.inc(n)
+        # sampled event trace: produce is stage 0; completed when the
+        # ingestor's watermark reaches this micro-batch's max seq
+        self.telemetry.trace_produce(int(np.max(batch["seq"])))
         return n
 
     # -- consume side ---------------------------------------------------------
@@ -226,6 +255,7 @@ class DurablePipeline:
         """
         names: Dict[int, str] = {}
         polled: List[Dict[str, np.ndarray]] = []
+        max_seq = 0
         for c in self.consumers:
             limit = None if upto is None \
                 else int(upto.get(c.partition, c.position))
@@ -242,16 +272,22 @@ class DurablePipeline:
                     # names-only payloads carry no events: max_seq 0
                     # makes them commit-eligible immediately
                     smax = int(cols["seq"].max()) if len(cols["seq"]) else 0
+                    max_seq = max(max_seq, smax)
                     self._polled[c.partition].append((pos0 + j + 1, smax))
                     polled.append(cols)
                 if len(got) < max_n:
                     break
         self.hook("after_read")
+        if max_seq:
+            self.telemetry.event_stage("pump", max_seq)
         n_new = sum(len(p["seq"]) for p in polled)
         self.metrics["read"] += n_new
+        if n_new:
+            self._c_read.inc(n_new)
         applied = self._apply_events(polled, names, force=False)
         self.hook("after_apply")
         self._commit_applied()
+        self._g_commit_lag.set(self.lag())
         return {"read": n_new, "applied": applied}
 
     def _apply_events(self, polled: List[Dict[str, np.ndarray]],
@@ -377,6 +413,7 @@ class DurablePipeline:
         pure function of the checkpointed arenas plus the replayed
         suffix, so ``load_checkpoint`` rebuilds them deterministically
         instead (DESIGN.md §11.4)."""
+        t0 = self.telemetry.clock()
         self.pump()
         self.flush()
         barrier = {c.partition: c.position for c in self.consumers}
@@ -394,6 +431,8 @@ class DurablePipeline:
         self.log.set_hold(self.topic_name, self.group, barrier)
         self.metrics["truncated"] += self.log.truncate(self.topic_name,
                                                        barrier)
+        self._h_ckpt_s.observe(self.telemetry.clock() - t0)
+        self._h_ckpt_bytes.observe(os.path.getsize(path))
         return barrier
 
     def load_checkpoint(self, path: str) -> Dict[int, int]:

@@ -1,0 +1,140 @@
+"""Freshness-schema contract (ISSUE 10 satellite).
+
+Every layer that exports a ``freshness()`` mark — event_ingest,
+monitor (pool), policy, query_service, replication — must emit keys
+and types ``query.merge_freshness`` can merge, alone and combined
+with every other layer's mark. A new layer that silently breaks the
+deployment-wide mark (the policy engine's lag-only mark used to
+KeyError the merge) fails here, not in an operator's dashboard.
+"""
+import numbers
+
+import numpy as np
+import pytest
+
+from repro.core import events as ev
+from repro.core import snapshot as snap
+from repro.core.event_ingest import EventIngestor, IngestConfig
+from repro.core.eventlog import EventLog
+from repro.core.index import AggregateIndex, PrimaryIndex
+from repro.core.monitor import MonitorConfig, MonitorPool
+from repro.core.policy import PolicyEngine, Rule
+from repro.core.query import merge_freshness
+from repro.core.query_service import QueryService
+from repro.core.replication import ReplicatedQueryService, ReplicationGroup
+from repro.core.sharded_index import ShardedPrimaryIndex
+
+PCFG = snap.PipelineConfig(n_users=8, n_groups=4, n_dirs=16)
+
+#: merged-mark numeric fields and the invariant each obeys
+MERGED_NUMERIC = ("applied_seq", "pending_events", "staleness_s",
+                  "applied_batches", "reconciled_at", "log_lag",
+                  "index_lag", "rollup_dirty", "replica_lag", "sources")
+
+
+def _ingestor():
+    return EventIngestor(
+        IngestConfig(pad_to=64, update_aggregates=False),
+        PCFG, PrimaryIndex(), AggregateIndex(), names={0: "fs"})
+
+
+def _event_ingest_mark():
+    ing = _ingestor()
+    b = ev.empty_batch(2)
+    b["seq"] = np.array([1, 2], np.int64)
+    b["etype"][:] = ev.E_CREAT
+    b["fid"] = np.array([1, 2], np.int32)
+    b["parent_fid"][:] = 0
+    b["has_stat"][:] = 1
+    ing.ingest(b)
+    return ing.freshness()
+
+
+def _monitor_mark():
+    pool = MonitorPool(2, MonitorConfig(max_fids=256, batch_size=8),
+                       ingestors=[_ingestor(), _ingestor()])
+    return pool.freshness()
+
+
+def _policy_mark():
+    eng = PolicyEngine(
+        [Rule(name="r", kind="max_bytes", path="/fs", limit_bytes=1)],
+        primary=PrimaryIndex())
+    eng.evaluate()
+    return eng.freshness()
+
+
+def _query_service_mark():
+    svc = QueryService(PrimaryIndex(), AggregateIndex(),
+                       ingestor=_ingestor(), use_kernels=False)
+    mark = svc.freshness()
+    svc.close()
+    return mark
+
+
+def _replication_mark(tmp_path):
+    def factory():
+        primary = ShardedPrimaryIndex(2)
+        ing = EventIngestor(
+            IngestConfig(pad_to=64, update_aggregates=False),
+            PCFG, primary, AggregateIndex())
+        return primary, ing
+    group = ReplicationGroup(EventLog(), factory, n_partitions=2,
+                             batch_size=16, ckpt_dir=str(tmp_path))
+    group.add_follower()
+    svc = ReplicatedQueryService(group)
+    mark = svc.freshness()
+    group.close()
+    return mark
+
+
+@pytest.fixture(scope="module")
+def marks(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("repl")
+    return {
+        "event_ingest": _event_ingest_mark(),
+        "monitor": _monitor_mark(),
+        "policy": _policy_mark(),
+        "query_service": _query_service_mark(),
+        "replication": _replication_mark(tmp),
+    }
+
+
+@pytest.mark.parametrize("layer", ["event_ingest", "monitor", "policy",
+                                   "query_service", "replication"])
+def test_each_mark_merges_alone(marks, layer):
+    """merge_freshness must accept every producer's mark by itself —
+    partial marks (the policy engine exports no watermark trio) must
+    degrade the merge, never KeyError it."""
+    mark = marks[layer]
+    assert mark is not None, f"{layer}.freshness() returned None"
+    merged = merge_freshness([mark])
+    assert merged is not None
+    for k in MERGED_NUMERIC:
+        assert isinstance(merged[k], numbers.Number), (layer, k, merged[k])
+    assert isinstance(merged["rollup_exact"], bool)
+
+
+def test_all_marks_merge_combined(marks):
+    """The deployment-wide mark: every layer's freshness in one merge."""
+    merged = merge_freshness(list(marks.values()))
+    assert merged is not None
+    assert merged["sources"] == len(marks)
+    for k in MERGED_NUMERIC:
+        assert isinstance(merged[k], numbers.Number), (k, merged[k])
+    # the watermark trio obeys min/sum/max over the inputs
+    seqs = [m.get("applied_seq", 0) for m in marks.values()]
+    assert merged["applied_seq"] == min(seqs)
+    assert merged["pending_events"] == sum(
+        m.get("pending_events", 0) for m in marks.values())
+    assert merged["staleness_s"] == max(
+        m.get("staleness_s", 0.0) for m in marks.values())
+
+
+def test_merged_mark_remerges():
+    """A merged mark is itself a valid input mark (hierarchical
+    deployments merge partition merges)."""
+    a = merge_freshness([_event_ingest_mark()])
+    b = merge_freshness([_policy_mark()])
+    again = merge_freshness([a, b])
+    assert again is not None and again["sources"] == 2

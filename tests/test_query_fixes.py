@@ -198,3 +198,28 @@ def test_unknown_query_errors_list_the_full_allowlist():
         q.select_many([("disk_usage", (), {})])
     for err in (str(e1.value), str(e2.value)):
         assert "disk_usage" in err and want in err
+
+
+def test_merge_freshness_defaults_partial_marks():
+    """Regression (ISSUE 10 satellite): ``merge_freshness`` hard-indexed
+    ``applied_seq`` / ``pending_events`` / ``staleness_s`` and KeyErrored
+    on a mark from a layer that only exports lag fields, while every
+    LATER key was ``.get``-defaulted. Partial marks must degrade the
+    merge (applied_seq pins at 0 — "can't vouch for anything newer"),
+    never crash it."""
+    from repro.core.query import merge_freshness
+
+    partial = {"mode": "policy", "log_lag": 3, "replica_lag": 2}
+    merged = merge_freshness([partial])          # used to KeyError here
+    assert merged["applied_seq"] == 0
+    assert merged["pending_events"] == 0
+    assert merged["staleness_s"] == 0.0
+    assert merged["log_lag"] == 3 and merged["replica_lag"] == 2
+
+    full = {"mode": "eager", "applied_seq": 9, "pending_events": 1,
+            "staleness_s": 0.5}
+    both = merge_freshness([partial, full])
+    assert both["applied_seq"] == 0              # min over sources
+    assert both["pending_events"] == 1           # sums
+    assert both["staleness_s"] == 0.5            # max
+    assert both["sources"] == 2
